@@ -1,0 +1,108 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifact (artifacts/dryrun_matrix.json).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--artifact path]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(path=None):
+    base = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    if path:
+        return json.load(open(path)), path
+    per_arch = sorted(glob.glob(os.path.join(base, "matrix_*.json")))
+    if per_arch:
+        rows = []
+        for p in per_arch:
+            rows.extend(json.load(open(p)))
+        return rows, f"{len(per_arch)} matrix_*.json files"
+    cands = sorted(glob.glob(os.path.join(base, "dryrun_matrix.json"))) \
+        or sorted(glob.glob(os.path.join(base, "dryrun_*.json")))
+    return json.load(open(cands[-1])), cands[-1]
+
+
+def dryrun_table(rows) -> str:
+    out = ["| cell | status | compile (s) | peak GiB/dev | args GiB | "
+           "collective kinds |", "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['cell']} | **skip** | — | — | — | "
+                       f"{r['reason'][:60]}… |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['cell']} | **ERROR** | — | — | — | "
+                       f"{r['error'][:60]} |")
+            continue
+        kinds = ", ".join(f"{k}:{v/2**30:.2f}GiB"
+                          for k, v in sorted(r["costs"]["coll"].items()))
+        out.append(
+            f"| {r['cell']} | ok | {r['compile_s']} "
+            f"| {r['memory']['peak_gib']:.2f} "
+            f"| {r['memory']['argument_gib']:.2f} | {kinds} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| cell | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | "
+           "useful/HLO | roofline frac |", "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['cell']} | {rf['t_compute_s']*1e3:.2f} "
+            f"| {rf['t_memory_s']*1e3:.2f} | {rf['t_collective_s']*1e3:.2f} "
+            f"| {rf['dominant']} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(rows) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skips = [r for r in rows if r["status"] == "skip"]
+    errs = [r for r in rows if r["status"] == "error"]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = \
+            doms.get(r["roofline"]["dominant"], 0) + 1
+    lines = [f"- cells: {len(ok)} ok / {len(skips)} documented skips / "
+             f"{len(errs)} errors",
+             f"- dominant terms: {doms}"]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    if worst:
+        lines.append(f"- worst roofline fraction: {worst[0]['cell']} "
+                     f"({worst[0]['roofline']['roofline_fraction']:.4f})")
+        best = worst[-1]
+        lines.append(f"- best roofline fraction: {best['cell']} "
+                     f"({best['roofline']['roofline_fraction']:.3f})")
+    coll = sorted(ok, key=lambda r: -r["roofline"]["t_collective_s"])
+    if coll:
+        lines.append(f"- most collective-bound: {coll[0]['cell']} "
+                     f"(T_coll {coll[0]['roofline']['t_collective_s']*1e3:.1f} ms)")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default=None)
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "summary"])
+    args = ap.parse_args()
+    rows, path = load(args.artifact)
+    print(f"<!-- generated from {os.path.basename(path)} -->\n")
+    if args.section in ("all", "summary"):
+        print("### Summary\n" + summary(rows) + "\n")
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run matrix\n" + dryrun_table(rows) + "\n")
+    if args.section in ("all", "roofline"):
+        print("### Roofline terms\n" + roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig1_*        — TrIM ifmap access overhead per ifmap size (derived=%).
+  * fig6_*        — per-layer OPs/Access/Slice improvement (derived=x).
+  * table1_*      — normalized efficiency metrics (derived=TOPS/W|TOPS/mm2).
+  * sim_*         — cycle-simulator throughput (us/call = one 14x14 slice
+                    pass), derived = measured OPs/external-access.
+  * kernel_*      — Pallas kernel wall time in interpret mode vs the jnp
+                    oracle (CPU validation timing, not TPU perf).
+  * roofline_*    — summary of the dry-run artifact (derived = projected
+                    roofline fraction), if artifacts/dryrun_matrix.json
+                    exists.
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _time(fn, warmup=1, iters=3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_fig1(emit):
+    from repro.core import fig1_curve
+    t0 = time.perf_counter()
+    curve = fig1_curve(sizes=(14, 28, 56, 112, 224))
+    us = (time.perf_counter() - t0) * 1e6
+    for size, pct in curve.items():
+        emit(f"fig1_overhead_I{size}", us / len(curve), f"{pct:.2f}%")
+
+
+def bench_fig6(emit):
+    from repro.core import fig6
+    for net in ("vgg16", "alexnet"):
+        t0 = time.perf_counter()
+        rows = fig6(net)
+        us = (time.perf_counter() - t0) * 1e6 / len(rows)
+        for r in rows:
+            emit(f"fig6_{net}_{r['layer']}", us,
+                 f"{r['improvement']:.2f}x")
+
+
+def bench_table1(emit):
+    from repro.core.energy import table1
+    t0 = time.perf_counter()
+    rows = table1()
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    for r in rows:
+        emit(f"table1_{r['name'].split()[0]}", us,
+             f"{r['norm_energy_eff_tops_per_w']:.2f}TOPS/W|"
+             f"{r['norm_area_eff_tops_per_mm2']:.2f}TOPS/mm2")
+
+
+def bench_simulator(emit):
+    from repro.core import TrimSliceSim
+    rng = np.random.default_rng(0)
+    ifmap = rng.standard_normal((14, 14))
+    w = rng.standard_normal((3, 3))
+    for mode in ("trim", "3dtrim"):
+        sim = TrimSliceSim(3, mode)
+        us = _time(lambda: sim.run(ifmap, w))
+        _, stats = sim.run(ifmap, w)
+        emit(f"sim_slice14_{mode}", us,
+             f"{stats.ops_per_memory_access:.2f}ops/access")
+
+
+def bench_kernels(emit):
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 28, 28, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 16, 32)) * .2, jnp.float32)
+    us_k = _time(lambda: ops.conv2d(x, w, impl="pallas").block_until_ready())
+    us_r = _time(lambda: ops.conv2d(x, w, impl="ref").block_until_ready())
+    emit("kernel_conv2d_pallas_interp", us_k, f"oracle={us_r:.0f}us")
+
+    xx = jnp.asarray(rng.standard_normal((2, 256, 64)), jnp.float32)
+    ww = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    us_k = _time(lambda: ops.depthwise_conv1d(
+        xx, ww, impl="pallas").block_until_ready())
+    us_r = _time(lambda: ops.depthwise_conv1d(
+        xx, ww, impl="ref").block_until_ready())
+    emit("kernel_conv1d_pallas_interp", us_k, f"oracle={us_r:.0f}us")
+
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.float32)
+    us_k = _time(lambda: ops.attention(
+        q, kv, kv, impl="pallas").block_until_ready())
+    us_c = _time(lambda: ops.attention(
+        q, kv, kv, impl="chunked", chunk=64).block_until_ready())
+    emit("kernel_flashattn_pallas_interp", us_k, f"chunked={us_c:.0f}us")
+
+
+def bench_roofline(emit):
+    path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "dryrun_matrix.json")
+    cands = sorted(glob.glob(path)) or sorted(glob.glob(
+        os.path.join(os.path.dirname(path), "dryrun_*.json")))
+    if not cands:
+        emit("roofline_artifact", 0.0, "missing(run launch.dryrun)")
+        return
+    rows = json.load(open(cands[-1]))
+    ok = [r for r in rows if r.get("status") == "ok" and "roofline" in r]
+    for r in ok:
+        rf = r["roofline"]
+        emit(f"roofline_{r['cell'].replace('/', '_')}",
+             r.get("compile_s", 0) * 1e6,
+             f"frac={rf['roofline_fraction']:.3f}|dom={rf['dominant']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+
+    bench_fig1(emit)
+    bench_fig6(emit)
+    bench_table1(emit)
+    bench_simulator(emit)
+    bench_kernels(emit)
+    bench_roofline(emit)
+
+
+if __name__ == "__main__":
+    main()

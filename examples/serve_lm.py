@@ -1,0 +1,15 @@
+"""Batched serving example across model families (dense KV cache, mamba
+SSM state, recurrentgemma ring buffer).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    for arch in ("qwen2.5-3b", "falcon-mamba-7b", "recurrentgemma-2b"):
+        serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "12", "--gen", "20"])

@@ -1,0 +1,2 @@
+from repro.configs import registry  # noqa: F401
+from repro.configs.shapes import ShapePlan  # noqa: F401

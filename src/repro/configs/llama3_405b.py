@@ -1,0 +1,28 @@
+"""llama3-405b [dense] — 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 — GQA, 128k vocab.  [arXiv:2407.21783; unverified]
+
+Memory plan (per v5e chip, 16 GiB): FSDP (params+grads+moments sharded
+over data x model = 256 ways) + bf16 moments + 16 microbatches + Megatron
+sequence parallelism for the saved layer-boundary activations.
+"""
+
+from repro.configs.shapes import default_plans
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llama3-405b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID, family="dense", n_layers=126, d_model=16384, n_heads=128,
+    n_kv_heads=8, head_dim=128, d_ff=53248, vocab=128256, rope_theta=5e5)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+    d_ff=208, vocab=128, attn_impl="ref", remat=False)
+
+PLANS = default_plans(overrides={
+    "train_4k": dict(n_micro=16, fsdp=True, moment_dtype="bfloat16",
+                     accum_dtype="bfloat16",
+                     rules_overrides={"seq": "model"}),
+    "prefill_32k": dict(fsdp=True),
+    "decode_32k": dict(fsdp=True, rules_overrides={"seq": "model"}),
+})

@@ -1,0 +1,122 @@
+"""Architecture registry: ``--arch <id>`` resolution, abstract input specs
+per shape cell, numeric parameter counts and MODEL_FLOPS."""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapePlan
+from repro.models import api
+from repro.models.base import Param
+from repro.models.config import ModelConfig
+
+_MODULES = [
+    "phi35_moe", "qwen3_moe", "falcon_mamba", "starcoder2_7b",
+    "starcoder2_3b", "llama3_405b", "qwen25_3b", "llava_next_34b",
+    "seamless_m4t", "recurrentgemma_2b",
+]
+
+
+def _load():
+    table = {}
+    for m in _MODULES:
+        mod = importlib.import_module(f"repro.configs.{m}")
+        table[mod.ARCH_ID] = mod
+    return table
+
+
+_TABLE = None
+
+
+def archs() -> list[str]:
+    global _TABLE
+    if _TABLE is None:
+        _TABLE = _load()
+    return list(_TABLE)
+
+
+def get(arch_id: str):
+    global _TABLE
+    if _TABLE is None:
+        _TABLE = _load()
+    if arch_id not in _TABLE:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_TABLE)}")
+    return _TABLE[arch_id]
+
+
+# ---------------------------------------------------------------------------
+# Numeric parameter counts (from the Param declaration tree)
+# ---------------------------------------------------------------------------
+
+def _size(p: Param) -> int:
+    n = 1
+    for s in p.shape:
+        n *= s
+    return n
+
+
+def count_params(cfg: ModelConfig) -> int:
+    tree = api.params(cfg)
+    return sum(_size(p) for p in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, Param)))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token: expert tensors scaled by top_k/n_experts."""
+    tree = api.params(cfg)
+    total = 0
+    for p in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Param)):
+        n = _size(p)
+        if "experts" in p.axes and len(p.shape) >= 3:
+            n = n * cfg.top_k // max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+def _subtree_count(tree) -> int:
+    return sum(_size(p) for p in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, Param)))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per shape cell (pure ShapeDtypeStructs, no sharding)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, plan: ShapePlan) -> dict:
+    b, s = plan.batch, plan.seq
+    i32 = jnp.int32
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if plan.kind == "decode":
+        return {"tokens": sds((b, 1), i32), "cache_len": sds((b,), i32)}
+    nv = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    text = s - nv
+    batch = {"tokens": sds((b, text), i32)}
+    if plan.kind == "train":
+        batch["labels"] = sds((b, text), i32)
+    if cfg.frontend == "vision":
+        batch["vision"] = sds((b, nv, cfg.d_model), act)
+    if cfg.family == "encdec":
+        batch["src"] = sds((b, s, cfg.d_model), act)
+    return batch
+
+
+def model_flops(cfg: ModelConfig, plan: ShapePlan) -> float:
+    """MODEL_FLOPS per step: 6*N*D train, 2*N*D inference (active params)."""
+    n = count_active_params(cfg)
+    if cfg.family == "encdec":
+        tree = api.params(cfg)
+        n_enc = _subtree_count(tree["enc_blocks"])
+        n_dec = _subtree_count(tree["dec_blocks"])
+        n_emb = _subtree_count(tree["tok"])
+        if plan.kind == "train":
+            return 6.0 * plan.batch * plan.seq * (n_enc + n_dec + n_emb)
+        if plan.kind == "prefill":
+            return 2.0 * plan.batch * plan.seq * (n_enc + n_dec + n_emb)
+        return 2.0 * plan.batch * (n_dec + n_emb)
+    tokens = plan.batch * (plan.seq if plan.kind != "decode" else 1)
+    mult = 6.0 if plan.kind == "train" else 2.0
+    return mult * n * tokens

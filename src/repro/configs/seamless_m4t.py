@@ -1,0 +1,29 @@
+"""seamless-m4t-large-v2 [audio] — 24L d_model=1024 16H (kv=16 -> MHA)
+d_ff=8192 vocab=256206 — encoder-decoder, multimodal.
+
+Interpretation: "24L" = 24 encoder + 24 decoder layers (matching the HF
+text encoder/decoder of seamless-m4t-v2-large).  The speech frontend is a
+STUB: input_specs() provides precomputed frame embeddings (B, L, d_model).
+[arXiv:2308.11596; hf]
+"""
+
+from repro.configs.shapes import default_plans
+from repro.models.config import ModelConfig
+
+ARCH_ID = "seamless-m4t-large-v2"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID, family="encdec", n_layers=48, enc_layers=24,
+    dec_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=8192, vocab=256206, norm="layernorm", mlp="gelu",
+    frontend="audio")
+
+SMOKE = CONFIG.replace(
+    n_layers=4, enc_layers=2, dec_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, vocab=128, attn_impl="ref",
+    remat=False)
+
+PLANS = default_plans(overrides={
+    "train_4k": dict(n_micro=4),
+    "decode_32k": dict(rules_overrides={"seq": "model"}),
+})

@@ -1,0 +1,50 @@
+"""Assigned input-shape cells and per-(arch, shape) execution plans."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ShapePlan:
+    """One (architecture x input-shape) dry-run cell."""
+
+    shape: str                  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                   # train | prefill | decode
+    batch: int
+    seq: int
+    n_micro: int = 1
+    fsdp: bool = False
+    moment_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    rules_overrides: dict = field(default_factory=dict)
+    skip: str | None = None     # reason, for documented skips
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+TRAIN_4K = ShapePlan("train_4k", "train", batch=256, seq=4096)
+PREFILL_32K = ShapePlan("prefill_32k", "prefill", batch=32, seq=32768)
+DECODE_32K = ShapePlan("decode_32k", "decode", batch=128, seq=32768)
+LONG_500K = ShapePlan("long_500k", "decode", batch=1, seq=524288)
+
+FULL_ATTN_SKIP = ("pure full-attention stack: 524k-token decode requires "
+                  "sub-quadratic attention (and its KV cache exceeds any "
+                  "per-chip HBM at this batch); see DESIGN.md §5")
+
+
+def default_plans(*, sub_quadratic: bool = False,
+                  overrides: dict | None = None) -> dict:
+    """The four assigned cells, with the long_500k skip rule applied."""
+    plans = {
+        "train_4k": TRAIN_4K,
+        "prefill_32k": PREFILL_32K,
+        "decode_32k": DECODE_32K,
+        "long_500k": LONG_500K if sub_quadratic
+        else LONG_500K.replace(skip=FULL_ATTN_SKIP),
+    }
+    for name, kw in (overrides or {}).items():
+        plans[name] = plans[name].replace(**kw)
+    return plans

@@ -1,0 +1,7 @@
+"""The paper's own workload: VGG-16 / AlexNet CNN inference through the
+3D-TrIM conv dataflow (kernels/trim_conv2d).  Not part of the 10-arch LM
+dry-run matrix; used by benchmarks/ and examples/cnn_inference.py."""
+
+ARCH_ID = "trim-cnn"
+
+from repro.core.model import alexnet_layers, vgg16_layers  # noqa: F401

@@ -1,0 +1,13 @@
+"""3D-TrIM core: dataflow simulator, analytical models, tiling, roofline."""
+
+from repro.core.model import (  # noqa: F401
+    ConvLayer, HWConfig, TRIM, TRIM_3D,
+    ifmap_reads_per_channel, ifmap_overhead_pct, fig1_curve,
+    layer_accesses, compare_layer, fig6, vgg16_layers, alexnet_layers,
+)
+from repro.core.dataflow import (  # noqa: F401
+    TrimSliceSim, SliceStats, core_conv, reference_conv2d_valid,
+)
+from repro.core.tiling import (  # noqa: F401
+    subkernel_decomposition, plan_conv_tiles, ConvTilePlan,
+)

@@ -1,0 +1,222 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+The container is CPU-only; TPU v5e is the *target*.  We derive, per
+(architecture x shape x mesh) dry-run cell:
+
+    T_compute    = FLOPs_per_device      / PEAK_FLOPS        (197 TFLOP/s bf16)
+    T_memory     = HBM_bytes_per_device  / HBM_BW            (819 GB/s)
+    T_collective = wire_bytes_per_device / ICI_BW            (50 GB/s/link)
+
+``compiled.cost_analysis()`` reports **per-device** flops / bytes on this
+backend (verified against a hand-computed sharded einsum).  Collective wire
+bytes are not in cost_analysis, so we parse the post-optimization HLO text
+and apply ring-algorithm wire-cost formulas per collective kind:
+
+    all-reduce       2 * S * (g-1)/g      (reduce-scatter + all-gather)
+    all-gather       S_out * (g-1)/g
+    reduce-scatter   S_in * (g-1)/g  ==  S_out * (g-1)
+    all-to-all       S * (g-1)/g
+    collective-permute  S                 (point-to-point)
+
+where S is the per-device tensor size in the HLO and g the replica-group
+size.  This counts each byte once per link traversal on a ring; a real
+torus has multiple links per axis, so T_collective is an upper bound
+(documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-like hardware constants (per chip).
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op line: `%name = <result shapes> <op-kind>(`  or  `ROOT %name = ...`
+_OP_LINE_RE = re.compile(
+    r"=\s*(?P<result>\(?[\w\[\],{}\s/#*]*?\)?)\s*"
+    r"(?P<kind>all-reduce-start|all-gather-start|reduce-scatter|"
+    r"all-to-all|collective-permute-start|all-reduce|all-gather|"
+    r"collective-permute)\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[shape] token in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+@dataclass
+class CollectiveStats:
+    """Wire bytes per device, split by collective kind."""
+
+    by_kind: dict = field(default_factory=dict)
+    ops: list = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group("kind").replace("-start", "")
+        size = _shape_bytes(m.group("result"))
+        g = _group_size(line, n_devices)
+        if g <= 1 or size == 0:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2 * size * frac
+        elif kind == "all-gather":
+            wire = size * frac           # result is the gathered size
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)        # result is the scattered size
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:                            # collective-permute
+            wire = size
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.ops.append(dict(kind=kind, bytes=size, group=g, wire=wire))
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    cell: str
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_by_kind: dict
+    peak_memory_bytes: float = 0.0
+    model_flops_per_dev: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if self.flops_per_dev == 0:
+            return 0.0
+        return self.model_flops_per_dev / self.flops_per_dev
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline actually achieved at the
+        estimated step time (a.k.a. projected MFU on useful flops)."""
+        if self.step_time_s == 0:
+            return 0.0
+        return self.model_flops_per_dev / (self.step_time_s * PEAK_FLOPS)
+
+    def as_row(self) -> dict:
+        return {
+            "cell": self.cell,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "peak_memory_gib": self.peak_memory_bytes / 2**30,
+        }
+
+
+def analyze_compiled(cell: str, compiled, n_devices: int,
+                     model_flops_total: float = 0.0) -> RooflineTerms:
+    """Build roofline terms from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text(), n_devices)
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes", 0) if mem else 0
+    # arguments (weights/opt state) resident in HBM count toward peak too;
+    # CompiledMemoryStats.peak covers temp + args on this backend.
+    args = getattr(mem, "argument_size_in_bytes", 0) if mem else 0
+    out = getattr(mem, "output_size_in_bytes", 0) if mem else 0
+    peak = max(peak, args + out)
+    return RooflineTerms(
+        cell=cell,
+        flops_per_dev=flops,
+        hbm_bytes_per_dev=hbm,
+        coll_bytes_per_dev=colls.total_bytes,
+        coll_by_kind=dict(colls.by_kind),
+        peak_memory_bytes=float(peak),
+        model_flops_per_dev=model_flops_total / max(n_devices, 1),
+    )
+
+
+def markdown_table(rows: list[RooflineTerms]) -> str:
+    hdr = ("| cell | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | "
+           "useful/HLO | roofline frac | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r.cell} | {r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} "
+            f"| {r.t_collective*1e3:.2f} | {r.dominant} "
+            f"| {r.useful_flops_ratio:.2f} | {r.roofline_fraction:.3f} "
+            f"| {r.peak_memory_bytes/2**30:.2f} |")
+    return "\n".join(lines)

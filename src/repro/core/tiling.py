@@ -1,0 +1,101 @@
+"""Tiling planners: kernel tiling (paper §III) and TPU VMEM block planning.
+
+Two distinct concerns live here:
+
+* ``subkernel_decomposition`` — the paper's kernel-tiling trick: a K x K
+  kernel with K > native_k is split into ceil(K/3)^2 sub-kernels of at most
+  3 x 3 taps, each assigned to a different core; the adder trees accumulate
+  the partial results.  We use the same decomposition arithmetically in
+  ``kernels/ops.py`` for K > 8 (MXU-unfriendly kernels).
+
+* ``plan_conv_tiles`` — the TPU analogue of sizing the IRB: choose VMEM
+  block shapes (spatial strip x C_in tile x C_out tile) so that the
+  resident set (ifmap strip + weight tile + psum block) fits the ~16 MiB
+  VMEM of a TPU core while keeping the MXU matmul dimensions aligned to
+  multiples of the 128-lane hardware tiling.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024      # per-core VMEM budget (v5e-like)
+MXU_ALIGN = 128                    # lane alignment for MXU operands
+
+
+def subkernel_decomposition(k: int, native_k: int = 3
+                            ) -> list[tuple[int, int, int, int]]:
+    """Split a K x K kernel into (row_off, col_off, kh, kw) sub-kernels.
+
+    Matches §III: "a 5x5 kernel can be split into four 3x3 sub-kernels" —
+    we return the un-padded tap extents (3,3), (3,2), (2,3), (2,2) whose
+    union tiles the 5x5; zero-padding to 3x3 is a hardware detail that the
+    arithmetic decomposition does not need.
+    """
+    if k <= native_k:
+        return [(0, 0, k, k)]
+    subs = []
+    for r0 in range(0, k, native_k):
+        for c0 in range(0, k, native_k):
+            subs.append((r0, c0, min(native_k, k - r0), min(native_k, k - c0)))
+    return subs
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down_pow2(x: int) -> int:
+    return 1 << max(x.bit_length() - 1, 0)
+
+
+@dataclass(frozen=True)
+class ConvTilePlan:
+    """Block shapes for the trim_conv2d Pallas kernel."""
+
+    tile_h: int          # spatial strip height (output rows per block)
+    tile_cin: int        # input-channel tile
+    tile_cout: int       # output-channel tile
+    halo: int            # K - 1 rows kept resident across strips ("shadow")
+    vmem_bytes: int      # resident-set estimate
+
+    def grid(self, h_out: int, cin: int, cout: int) -> tuple[int, int, int]:
+        return (math.ceil(cout / self.tile_cout),
+                math.ceil(h_out / self.tile_h),
+                math.ceil(cin / self.tile_cin))
+
+
+def plan_conv_tiles(h: int, w: int, cin: int, cout: int, k: int,
+                    dtype_bytes: int = 4,
+                    vmem_budget: int = VMEM_BYTES) -> ConvTilePlan:
+    """Choose (TH, TCin, TCout) so the resident set fits VMEM.
+
+    Resident set per grid step (the TPU image of the IRB contract):
+      ifmap strip   (TH + K - 1, W + K - 1, TCin)   — fetched once, reused
+                     by every C_out tile (index map ignores the C_out axis)
+      weight tile   (K, K, TCin, TCout)             — stationary
+      psum block    (TH, W, TCout) fp32             — adder-tree analogue
+    """
+    halo = k - 1
+    tile_cin = min(_round_up(cin, MXU_ALIGN), 256) if cin >= MXU_ALIGN \
+        else _round_up(cin, 8)
+    tile_cout = min(_round_up(cout, MXU_ALIGN), 256) if cout >= MXU_ALIGN \
+        else _round_up(cout, 8)
+
+    def resident(th: int, tci: int, tco: int) -> int:
+        strip = (th + halo) * (w + halo) * tci * dtype_bytes
+        wtile = k * k * tci * tco * dtype_bytes
+        psum = th * w * tco * 4
+        return strip + wtile + psum
+
+    tile_h = h
+    while tile_h > 1 and resident(tile_h, tile_cin, tile_cout) > vmem_budget:
+        tile_h = _round_down_pow2(tile_h - 1)
+    while (resident(tile_h, tile_cin, tile_cout) > vmem_budget
+           and tile_cin > 8):
+        tile_cin //= 2
+    return ConvTilePlan(tile_h=tile_h, tile_cin=min(tile_cin, cin) if cin >= 8
+                        else tile_cin,
+                        tile_cout=tile_cout, halo=halo,
+                        vmem_bytes=resident(tile_h, tile_cin, tile_cout))

@@ -1,0 +1,51 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / SP / FSDP).
+
+Production meshes (launch/mesh.py):
+  single-pod: (16, 16)    = ('data', 'model')
+  multi-pod:  (2, 16, 16) = ('pod', 'data', 'model')
+
+The 'pod' axis composes with 'data' for batch sharding, so scaling out is
+adding pod extent; cross-pod traffic is only the gradient all-reduce.
+FSDP ('zero3') additionally shards the parameters' embed dim over 'data'
+(kept *within* a pod so parameter all-gathers never cross pods).
+"""
+
+from __future__ import annotations
+
+BASE_RULES: dict = {
+    # activations
+    "batch": ("pod", "data"),
+    "act_embed": None,
+    "tokens": ("pod", "data"),    # flattened token dim (MoE dispatch)
+    "seq": None,                  # set to 'data' for sequence parallelism
+    # params
+    "embed": None,                # set to 'data' by fsdp=True (ZeRO-3)
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",           # expert parallelism
+    "layers": None,
+}
+
+
+def make_rules(fsdp: bool = False, seq_parallel: bool = False,
+               **overrides) -> dict:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = ("data", "pod")
+    if seq_parallel:
+        rules["seq"] = "data"
+    rules.update(overrides)
+    return rules
+
+
+def batch_spec(mesh, rules):
+    from jax.sharding import NamedSharding, PartitionSpec
+    axes = rules.get("batch", ("pod", "data"))
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    return NamedSharding(mesh, PartitionSpec(axes if len(axes) > 1
+                                             else (axes[0] if axes else None)))

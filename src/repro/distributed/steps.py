@@ -1,0 +1,163 @@
+"""pjit train / prefill / decode step builders.
+
+``make_train_step`` implements: microbatched gradient accumulation
+(lax.scan over microbatches — keeps the gradient all-reduce off the
+critical path: SPMD materializes it once, after the last microbatch),
+global-norm clipping, AdamW with sharded moments, and donation of the
+train state.  All sharding is expressed through NamedShardings derived
+from the Param declarations + logical rules, so the same code runs on the
+single-pod and multi-pod production meshes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.models.base import Param, param_pspecs
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# State declaration
+# ---------------------------------------------------------------------------
+
+def train_state_decl(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig) -> dict:
+    p = api.params(cfg)
+    moment = lambda q: Param(q.shape, q.axes, init="zeros",
+                             dtype=opt_cfg.moment_dtype)
+    is_p = lambda x: isinstance(x, Param)
+    return {
+        "params": p,
+        "opt": {"mu": jax.tree.map(moment, p, is_leaf=is_p),
+                "nu": jax.tree.map(moment, p, is_leaf=is_p)},
+        "step": Param((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def state_shardings(decl, mesh, rules):
+    specs = param_pspecs(decl, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_tree, mesh, rules):
+    axes = rules.get("batch", ("pod", "data"))
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+
+    def spec_for(leaf):
+        valid, extent = [], 1
+        size = leaf.shape[0] if hasattr(leaf, "shape") and leaf.shape \
+            else None
+        for ax in axes:
+            if size is not None and size % (extent * mesh.shape[ax]) != 0:
+                break
+            valid.append(ax)
+            extent *= mesh.shape[ax]
+        if not valid:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, P(tuple(valid) if len(valid) > 1 else valid[0]))
+
+    return jax.tree.map(spec_for, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    rules: dict, n_micro: int = 1,
+                    accum_dtype=jnp.float32):
+    def loss_for(params, mb):
+        logits, aux = api.forward(params, mb, cfg, rules)
+        return api.loss_fn(logits, mb["labels"], aux)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, grads) = jax.value_and_grad(loss_for)(params, batch)
+        else:
+            def resh(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro,
+                                 *x.shape[1:])
+            micro = jax.tree.map(resh, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, gacc = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (loss_acc + l, gacc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        new_params, new_opt, metrics = adamw.apply_updates(
+            params, grads, state["opt"], state["step"], opt_cfg)
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, opt_cfg, rules, mesh, *, n_micro: int = 1,
+                   batch_tree: dict | None = None):
+    """jit with explicit in/out shardings and state donation."""
+    decl = train_state_decl(cfg, opt_cfg)
+    st_shard = state_shardings(decl, mesh, rules)
+    step = make_train_step(cfg, opt_cfg, rules, n_micro)
+    b_shard = batch_shardings(batch_tree or {"tokens": 0, "labels": 0},
+                              mesh, rules)
+    return jax.jit(step,
+                   in_shardings=(st_shard, b_shard),
+                   out_shardings=(st_shard, None),
+                   donate_argnums=(0,)), decl, st_shard
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, rules: dict):
+    def prefill(params, batch):
+        logits, aux = api.forward(params, batch, cfg, rules)
+        # next-token from the last position (greedy)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return logits, next_tok
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rules: dict):
+    def decode(params, state, batch):
+        logits, new_state = api.decode(params, batch, state, cfg, rules)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+    return decode
+
+
+def jit_decode_step(cfg, rules, mesh, batch: int, max_len: int):
+    state_decl = api.decode_state(cfg, batch, max_len)
+    st_shard = state_shardings(state_decl, mesh, rules)
+    params_decl = api.params(cfg)
+    p_shard = state_shardings(params_decl, mesh, rules)
+    step = make_decode_step(cfg, rules)
+    baxes = batch_shardings({"tokens": 0, "cache_len": 0}, mesh, rules)
+    return (jax.jit(step,
+                    in_shardings=(p_shard, st_shard, baxes),
+                    out_shardings=(None, st_shard),
+                    donate_argnums=(1,)),
+            params_decl, state_decl, p_shard, st_shard)

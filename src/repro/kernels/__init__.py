@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode) + jnp oracles.
+
+Each kernel module provides a ``pl.pallas_call`` with explicit BlockSpec
+VMEM tiling; ``ops.py`` is the jit'd public API; ``ref.py`` the oracle.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.trim_conv1d import trim_conv1d  # noqa: F401
+from repro.kernels.trim_conv2d import trim_conv2d  # noqa: F401

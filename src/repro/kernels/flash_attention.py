@@ -1,0 +1,123 @@
+"""Tiled online-softmax attention (FlashAttention) as a Pallas kernel.
+
+This is the transformer hot spot of the assigned LM architectures.  The
+schedule follows the same fetch-once contract as the conv kernel: the Q
+block is the stationary operand resident in VMEM; K/V tiles stream through
+VMEM exactly once per Q block; the softmax normalizer (m, l) and output
+accumulator live in VMEM scratch across the KV grid steps.
+
+GQA is handled in the index maps: the K/V BlockSpec maps a query head to
+its KV group head, so KV tiles are never replicated in HBM.
+
+Supports causal masking, local windows (RecurrentGemma) and logit soft
+caps.  Validated against ``ref.attention`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sm_scale: float, causal: bool, soft_cap: float | None,
+            window: int | None, block_q: int, block_k: int,
+            lq: int, lk: int, n_kv: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    if soft_cap is not None:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+
+    # absolute positions (queries are right-aligned for decode: off = lk-lq)
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q) + (lk - lq)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    mask = (k_pos < lk)[None, :] & (q_pos < lk)[:, None]
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "soft_cap", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, soft_cap: float | None = None,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D) -> (B, Lq, Hq, D)."""
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    group = hq // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(lq, 16))
+    block_k = min(block_k, max(lk, 16))
+    nq = math.ceil(lq / block_q)
+    nk = math.ceil(lk / block_k)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, lq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, lk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, lk, d)
+    qf = jnp.pad(qf, ((0, 0), (0, nq * block_q - lq), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, nk * block_k - lk), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, nk * block_k - lk), (0, 0)))
+
+    def kv_head(bh):
+        return (bh // hq) * hkv + (bh % hq) // group
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, sm_scale=sm_scale, causal=causal, soft_cap=soft_cap,
+            window=window, block_q=block_q, block_k=block_k,
+            lq=lq, lk=lk, n_kv=nk),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # denominator l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :lq].reshape(b, hq, lq, d).transpose(0, 2, 1, 3)

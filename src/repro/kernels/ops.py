@@ -1,0 +1,218 @@
+"""Public jit'd operator API over the Pallas kernels and their oracles.
+
+Every op takes ``impl``:
+
+  * ``"pallas"``  — the Pallas TPU kernel (interpret=True on CPU).
+  * ``"ref"``     — the pure-jnp oracle (kernels/ref.py).
+  * ``"chunked"`` — (attention only) FlashAttention algorithm expressed in
+    pure jnp with a ``lax.scan`` over KV chunks: identical O(L) memory
+    behaviour to the kernel, XLA-fusable, dry-run friendly.
+  * ``"chunked_unroll"`` — same, with a Python loop instead of the scan.
+    Used by the dry-run Δ-cost compiles, because XLA's HloCostAnalysis
+    counts while-loop bodies once (verified on this backend) and would
+    undercount scanned flops.
+
+``conv2d`` applies the paper's §III kernel tiling for K > MAX_NATIVE_K:
+the kernel is decomposed into 3x3-ish sub-kernels whose partial outputs
+are accumulated — the adder-tree path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import subkernel_decomposition
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.trim_conv1d import trim_conv1d
+from repro.kernels.trim_conv2d import trim_conv2d
+
+MAX_NATIVE_K = 8
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+# ---------------------------------------------------------------------------
+
+def _same_pads(size: int, k: int, s: int) -> tuple[int, int]:
+    """XLA 'SAME' padding: out = ceil(size/s), possibly asymmetric."""
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+           padding: str = "same", impl: str = "pallas") -> jax.Array:
+    """x: (N, H, W, Cin); w: (K, K, Cin, Cout)."""
+    if impl == "ref":
+        return ref.conv2d(x, w, stride=stride, padding=padding)
+    k = w.shape[0]
+    if padding == "same":
+        ph, pw = _same_pads(x.shape[1], k, stride), \
+            _same_pads(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    if k <= MAX_NATIVE_K:
+        return trim_conv2d(x, w, stride=stride, pad=0)
+    # Kernel tiling (paper §III): split K x K into sub-kernels, accumulate.
+    h_out = (x.shape[1] - k) // stride + 1
+    w_out = (x.shape[2] - k) // stride + 1
+    out = None
+    for r0, c0, kh, kw in subkernel_decomposition(k, native_k=3):
+        zs = x[:, r0:r0 + (h_out - 1) * stride + kh,
+               c0:c0 + (w_out - 1) * stride + kw, :]
+        part = trim_conv2d(zs, w[r0:r0 + kh, c0:c0 + kw], stride=stride,
+                           pad=0)
+        out = part if out is None else out + part   # adder tree
+    return out
+
+
+def depthwise_conv1d(x: jax.Array, w: jax.Array, *,
+                     impl: str = "pallas") -> jax.Array:
+    """Causal depthwise conv1d.  x: (B, L, D); w: (K, D)."""
+    if impl == "ref" or w.shape[0] < 2:
+        return ref.depthwise_conv1d(x, w)
+    return trim_conv1d(x, w)
+
+
+depthwise_conv1d_step = ref.depthwise_conv1d_step
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _chunk_update(q, kc, vc, carry, *, k_start, lk, sm_scale, causal,
+                  soft_cap, window, lq_off):
+    """Online-softmax update for one KV chunk.
+
+    q: (B, Hkv, G, Lq, D); kc/vc: (B, C, Hkv, D);
+    carry = (m, l, acc) with m/l: (B, Hkv, G, Lq, 1), acc like q.
+    """
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bhgqd,bchd->bhgqc", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * sm_scale
+    if soft_cap is not None:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    lq, c = q.shape[3], kc.shape[1]
+    q_pos = jnp.arange(lq) + lq_off
+    k_pos = jnp.arange(c) + k_start
+    mask = jnp.broadcast_to((k_pos < lk)[None, :], (lq, c))
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_new = acc * alpha + jnp.einsum("bhgqc,bchd->bhgqd", p,
+                                       vc.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, soft_cap: float | None = None,
+                      window: int | None = None, chunk: int = 1024,
+                      unroll: bool = False) -> jax.Array:
+    """FlashAttention schedule in pure jnp (KV streamed chunk by chunk).
+
+    q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D).
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    group = hq // hkv
+    chunk = min(chunk, lk)
+    nk = math.ceil(lk / chunk)
+    lkp = nk * chunk
+    sm_scale = 1.0 / math.sqrt(d)
+    lq_off = lk - lq   # queries right-aligned (decode/prefill continuation)
+
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, group, lq, d)
+    kp = jnp.pad(k, ((0, 0), (0, lkp - lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, lkp - lk), (0, 0), (0, 0)))
+
+    m0 = jnp.full((b, hkv, group, lq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, lq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, lq, d), jnp.float32)
+
+    # One chunk is checkpointed: the backward recomputes that chunk's
+    # logits instead of saving them — the FlashAttention-bwd structure.
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def _update(carry, kc, vc, ic):
+        return _chunk_update(qg, kc, vc, carry, k_start=ic * chunk, lk=lk,
+                             sm_scale=sm_scale, causal=causal,
+                             soft_cap=soft_cap, window=window,
+                             lq_off=lq_off)
+
+    def step(carry, ic):
+        kc = jax.lax.dynamic_slice_in_dim(kp, ic * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, ic * chunk, chunk, axis=1)
+        return _update(carry, kc, vc, ic), None
+
+    if unroll:
+        carry = (m0, l0, a0)
+        for ic in range(nk):
+            # skip chunks that are fully masked (causal / local window)
+            if causal and ic * chunk > lq_off + lq - 1:
+                continue
+            if window is not None and (ic + 1) * chunk - 1 < lq_off - window + 1:
+                continue
+            carry, _ = step(carry, ic)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nk))
+
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.reshape(b, hq, lq, d).transpose(0, 2, 1, 3)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, soft_cap: float | None = None,
+              window: int | None = None, impl: str = "chunked",
+              chunk: int = 1024) -> jax.Array:
+    """Multi-head GQA attention.  q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D)."""
+    if impl == "ref":
+        return ref.attention(q, k, v, causal=causal,
+                             logits_soft_cap=soft_cap, window=window)
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, soft_cap=soft_cap,
+                               window=window)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, soft_cap=soft_cap,
+                                 window=window, chunk=chunk)
+    if impl == "chunked_unroll":
+        return chunked_attention(q, k, v, causal=causal, soft_cap=soft_cap,
+                                 window=window, chunk=chunk, unroll=True)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, soft_cap: float | None = None,
+                     window: int | None = None) -> jax.Array:
+    """One-token attention over a KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, Lmax, Hkv, D); cache_len: () or (B,) —
+    number of valid cache entries (including the current token).
+    """
+    b, _, hq, d = q.shape
+    _, lmax, hkv, _ = k_cache.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(d)
+    if soft_cap is not None:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    k_pos = jnp.arange(lmax)
+    valid = k_pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window is not None:
+        valid &= k_pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These are the ground truth for the allclose sweeps in tests/ and the
+fallback implementation on platforms without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+           padding: str = "same") -> jax.Array:
+    """2D convolution oracle.  x: (N, H, W, Cin); w: (K, K, Cin, Cout)."""
+    pad = padding.upper()
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def depthwise_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Causal depthwise conv1d oracle (Mamba / RG-LRU temporal conv).
+
+    x: (B, L, D); w: (K, D).  y[b, t, d] = sum_k x[b, t-K+1+k, d] * w[k, d].
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+
+
+def depthwise_conv1d_step(state: jax.Array, x_t: jax.Array, w: jax.Array):
+    """Single decode step.  state: (B, K-1, D) trailing inputs; x_t: (B, D).
+
+    Returns (new_state, y_t).  The state is the decode-time image of the
+    shadow registers: the K-1 values carried across step boundaries.
+    """
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, D)
+    y_t = jnp.einsum("bkd,kd->bd", window, w)
+    return window[:, 1:, :], y_t
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, logits_soft_cap: float | None = None,
+              window: int | None = None) -> jax.Array:
+    """Dense attention oracle with GQA.
+
+    q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D); Hq % Hkv == 0.
+    ``window``: optional local-attention span (RecurrentGemma).
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, lq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(d).astype(q.dtype)
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+    q_pos = jnp.arange(lq)[:, None] + (lk - lq)
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, lq, hq, d)
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)

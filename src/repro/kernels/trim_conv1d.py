@@ -1,0 +1,69 @@
+"""Depthwise causal conv1d (Mamba / RG-LRU temporal conv) as a Pallas kernel.
+
+The 1D image of the 3D-TrIM dataflow: the sequence is tiled into
+non-overlapping chunks of ``TL`` steps; the ``K-1`` boundary timesteps are
+carried across grid steps in a VMEM scratch (shadow registers) instead of
+being re-fetched from HBM; the channel axis is tiled for the VPU lanes.
+
+At decode time the same carry *is* the inference state — see
+``ref.depthwise_conv1d_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, carry_ref, *, k: int, tl: int):
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)  # causal left padding
+
+    window = jnp.concatenate([carry_ref[...], x_ref[0]], axis=0)  # (TL+K-1, TD)
+    acc = jnp.zeros((tl, o_ref.shape[-1]), jnp.float32)
+    for i in range(k):
+        acc += window[i:i + tl].astype(jnp.float32) * w_ref[i].astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+    carry_ref[...] = window[-(k - 1):]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_l", "tile_d", "interpret"))
+def trim_conv1d(x: jax.Array, w: jax.Array, *, tile_l: int | None = None,
+                tile_d: int | None = None, interpret: bool = True
+                ) -> jax.Array:
+    """Causal depthwise conv1d.  x: (B, L, D); w: (K, D) -> (B, L, D)."""
+    b, length, d = x.shape
+    k, _ = w.shape
+    assert k >= 2
+    if tile_l is None:
+        tile_l = min(length, 512)
+    if tile_d is None:
+        tile_d = min(d, 1024 if d % 128 == 0 else d)
+    g_tiles = math.ceil(length / tile_l)
+    d_tiles = math.ceil(d / tile_d)
+    lp = g_tiles * tile_l
+    xp = jnp.pad(x, ((0, 0), (0, lp - length), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, tl=tile_l),
+        # g innermost: the carry is valid within one (batch, channel) sweep
+        grid=(b, d_tiles, g_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_l, tile_d), lambda bi, di, g: (bi, g, di)),
+            pl.BlockSpec((k, tile_d), lambda bi, di, g: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_l, tile_d),
+                               lambda bi, di, g: (bi, g, di)),
+        out_shape=jax.ShapeDtypeStruct((b, lp, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((k - 1, tile_d), x.dtype)],
+        interpret=interpret,
+    )(xp, w)
+    return out[:, :length]

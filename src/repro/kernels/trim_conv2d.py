@@ -1,0 +1,164 @@
+"""3D-TrIM convolution as a TPU Pallas kernel.
+
+TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
+
+* **Input-stationary strips.**  The padded ifmap is tiled into
+  non-overlapping strips of ``TH`` rows.  A strip is fetched from HBM
+  exactly once and stays resident in VMEM while every C_out tile consumes
+  it — the grid order is ``(N, strip, cout)`` with the input BlockSpec
+  index map *ignoring the cout axis*, which is the BlockSpec image of the
+  paper's P_O slices sharing one Input Recycling Buffer.
+
+* **Shadow-register carry.**  The ``K-1`` boundary rows a strip needs from
+  its predecessor are *not* re-fetched from HBM (that would be TrIM's
+  end-of-row overhead).  They are carried across sequential grid steps in
+  a VMEM scratch buffer (``carry_ref``) — the exact role the paper's
+  shadow registers play at the register level.
+
+* **Weight-stationary MXU taps.**  The K x K spatial taps are unrolled into
+  K^2 dense matmuls ``(TH_out * W_out, Cin) x (Cin, TCout)`` against the
+  stationary weight tile — the triangular PE movement re-shaped for a
+  128 x 128 systolic MXU instead of a 3 x 3 scalar PE slice.
+
+* **Adder tree.**  Tap/channel partial sums accumulate in an fp32 register
+  accumulator, the in-kernel analogue of the P_O adder trees.
+
+Supports arbitrary K and stride (kernel tiling for huge K is provided by
+``ops.conv2d``); validated in interpret mode against ``ref.conv2d``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, carry_ref, *, kh: int, kw: int,
+            stride: int, th_out: int, w_out: int, n_cout_tiles: int):
+    """One grid step: strip ``g`` of image ``n`` against cout tile ``co``."""
+    g = pl.program_id(1)
+    co = pl.program_id(2)
+    s = stride
+    r = (kh - 1) % s  # static in-window row offset (see ops.conv2d)
+
+    if kh > 1:
+        @pl.when(jnp.logical_and(g == 0, co == 0))
+        def _reset_carry():
+            # Strip 0 has no predecessor: the carry region is zero padding.
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+
+        window = jnp.concatenate([carry_ref[...], x_ref[0]], axis=0)
+    else:
+        window = x_ref[0]
+
+    cin = window.shape[-1]
+    acc = jnp.zeros((th_out * w_out, o_ref.shape[-1]), jnp.float32)
+    for ki in range(kh):       # the K x K taps: triangular movement as
+        for kj in range(kw):   # K^2 shifted views of the resident window
+            rows = window[ki + r: ki + r + (th_out - 1) * s + 1: s,
+                          kj: kj + (w_out - 1) * s + 1: s, :]
+            acc += jnp.dot(rows.reshape(th_out * w_out, cin),
+                           w_ref[ki, kj],
+                           preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(th_out, w_out, -1).astype(o_ref.dtype)
+
+    if kh > 1:
+        @pl.when(co == n_cout_tiles - 1)
+        def _update_carry():
+            # Shadow registers: keep the last K-1 rows for the next strip.
+            carry_ref[...] = window[-(kh - 1):]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "pad", "tile_h", "tile_cout", "interpret"))
+def trim_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                pad: int = 0, tile_h: int | None = None,
+                tile_cout: int | None = None,
+                interpret: bool = True) -> jax.Array:
+    """Strided 2D convolution.  x: (N, H, W, Cin); w: (K, K, Cin, Cout).
+
+    ``pad`` is symmetric zero padding (use ``(K-1)//2`` for 'same').
+    Returns (N, H_out, W_out, Cout).
+    """
+    n, h, width, cin = x.shape
+    kh, kw_dim, _, cout = w.shape
+    s = stride
+    h_out = (h + 2 * pad - kh) // s + 1
+    w_out = (width + 2 * pad - kw_dim) // s + 1
+
+    # --- tile planning -----------------------------------------------------
+    if tile_cout is None:
+        tile_cout = min(cout, 128 if cout % 128 == 0 else cout)
+    if tile_h is None:
+        # strip height: multiple of stride, resident set within ~8 MiB
+        wp_bytes = (width + 2 * pad + kh) * cin * x.dtype.itemsize
+        tile_h = max(s, min(h_out * s, (8 << 20) // max(wp_bytes, 1)))
+        tile_h -= tile_h % s
+        tile_h = max(tile_h, s)
+    assert tile_h % s == 0, "tile_h must be a multiple of the stride"
+    th_out = tile_h // s
+
+    # --- layout: pad once in HBM, tile into non-overlapping strips ---------
+    delta = (kh - 1) // s                      # top rows of the padded output
+    g_tiles = math.ceil((h_out + delta) / th_out)
+    rows_needed = g_tiles * tile_h
+    pad_bottom = rows_needed - h - pad
+    z = jnp.pad(x, ((0, 0), (pad, max(pad_bottom, 0)), (pad, pad), (0, 0)))
+    if pad_bottom < 0:
+        z = z[:, :rows_needed]
+    wp = z.shape[2]
+    assert wp >= (w_out - 1) * s + kw_dim
+
+    co_tiles = math.ceil(cout / tile_cout)
+    if cout % tile_cout:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0),
+                        (0, co_tiles * tile_cout - cout)))
+
+    out_padded = pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw_dim, stride=s, th_out=th_out,
+                          w_out=w_out, n_cout_tiles=co_tiles),
+        grid=(n, g_tiles, co_tiles),
+        in_specs=[
+            # fresh strip: index map ignores `co` -> fetched once per strip,
+            # shared by every cout tile (IRB sharing)
+            pl.BlockSpec((1, tile_h, wp, cin), lambda ni, g, co: (ni, g, 0, 0)),
+            # stationary weight tile
+            pl.BlockSpec((kh, kw_dim, cin, tile_cout),
+                         lambda ni, g, co: (0, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, th_out, w_out, tile_cout),
+                               lambda ni, g, co: (ni, g, 0, co)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, g_tiles * th_out, w_out, co_tiles * tile_cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((max(kh - 1, 1), wp, cin), x.dtype)],
+        interpret=interpret,
+    )(z, w)
+    return out_padded[:, delta:delta + h_out, :, :cout]
+
+
+def hbm_traffic_model(n, h, width, cin, cout, k, stride=1, pad=0,
+                      tile_h=8, tile_cout=128, dtype_bytes=4,
+                      mode: str = "3dtrim") -> dict:
+    """Analytical HBM bytes for the kernel — TPU image of the paper's model.
+
+    ``mode='trim'`` models strips that re-fetch their K-1 halo rows from
+    HBM (no carry scratch) — the overhead the shadow registers eliminate.
+    """
+    s = stride
+    h_out = (h + 2 * pad - k) // s + 1
+    w_out = (width + 2 * pad - k) // s + 1
+    th_out = tile_h // s
+    g_tiles = math.ceil((h_out + (k - 1) // s) / th_out)
+    wp = width + 2 * pad
+    halo_rows = 0 if mode == "3dtrim" else (g_tiles - 1) * (k - 1)
+    in_bytes = n * (g_tiles * tile_h + halo_rows) * wp * cin * dtype_bytes
+    w_bytes = k * k * cin * cout * dtype_bytes * g_tiles  # refetch per strip
+    out_bytes = n * h_out * w_out * cout * dtype_bytes
+    return dict(input=in_bytes, weights=w_bytes, output=out_bytes,
+                total=in_bytes + w_bytes + out_bytes,
+                overhead_pct=100.0 * halo_rows / max(g_tiles * tile_h, 1))

@@ -1,0 +1,347 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without real hardware:
+``.lower().compile()`` must succeed on the single-pod (16,16) mesh and the
+2-pod (2,16,16) mesh for every assigned cell; ``memory_analysis()`` proves
+the state fits per-chip HBM; ``cost_analysis()`` + the HLO collective
+parse feed §Roofline.
+
+Cost methodology (see EXPERIMENTS.md §Dry-run): XLA's HloCostAnalysis
+counts while-loop bodies once, so scanned layer stacks would be
+undercounted.  Each cell therefore runs
+
+  1. the FULL compile (scan over layers, real microbatching) -> memory
+     analysis + the production collective schedule, and
+  2. two small Δ-compiles with 1 and 2 *unrolled* layers (n_micro=1)
+     -> per-layer flop/byte/collective deltas, extrapolated:
+         cost(L) = cost(1) + (L-1) * (cost(2) - cost(1))
+     (hybrid archs solve per-kind deltas from 4 compiles).
+
+Validation of the extrapolation against a fully-unrolled compile is in
+tests/test_dryrun_validation.py.
+"""
+
+# The VERY FIRST lines, before any other import (jax locks the device
+# count on first init):
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import registry                      # noqa: E402
+from repro.core import roofline as rl                   # noqa: E402
+from repro.distributed import steps                     # noqa: E402
+from repro.distributed.sharding import make_rules       # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.models import api                            # noqa: E402
+from repro.models.base import abstract_params, tree_bytes_per_dev  # noqa: E402
+from repro.optim import AdamWConfig                     # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts")
+
+
+def _opt_cfg(plan):
+    return AdamWConfig(moment_dtype=jnp.bfloat16
+                       if plan.moment_dtype == "bfloat16" else jnp.float32)
+
+
+def _rules(plan, mesh):
+    return make_rules(fsdp=plan.fsdp, **plan.rules_overrides)
+
+
+def build_cell(cfg, plan, mesh, *, n_micro=None, delta_mode=False):
+    """Returns (jitted, arg_specs) ready to .lower(*arg_specs)."""
+    rules = _rules(plan, mesh)
+    exec_over = dict(dtype="bfloat16")
+    if delta_mode:
+        # unrolled layers + unrolled chunks for flop counting; chunk sizes
+        # are raised so at most ~8 chunks unroll (identical flops, far
+        # smaller HLO -> tractable compile on this 1-core container)
+        exec_over.update(unroll_layers=True, attn_impl="chunked_unroll",
+                         attn_chunk=max(cfg.attn_chunk, plan.seq // 8),
+                         scan_chunk=max(cfg.scan_chunk, plan.seq // 8))
+    cfg = cfg.replace(**exec_over)
+    batch = registry.input_specs(cfg, plan)
+    b_shard = steps.batch_shardings(batch, mesh, rules)
+    batch = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        batch, b_shard)
+
+    if plan.kind == "train":
+        nm = n_micro if n_micro is not None else plan.n_micro
+        # a microbatch must cover every batch shard (pod x data), else the
+        # partitioner falls back to replication inside the micro loop
+        baxes = rules.get("batch", ("pod", "data"))
+        baxes = (baxes,) if isinstance(baxes, str) else baxes
+        shards = 1
+        for ax in baxes:
+            shards *= mesh.shape.get(ax, 1)
+        nm = max(1, min(nm, plan.batch // max(shards, 1)))
+        opt_cfg = _opt_cfg(plan)
+        decl = steps.train_state_decl(cfg, opt_cfg)
+        st_shard = steps.state_shardings(decl, mesh, rules)
+        state = abstract_params(decl, mesh, rules, jnp.bfloat16)
+        accum = jnp.bfloat16 if plan.accum_dtype == "bfloat16" \
+            else jnp.float32
+        fn = steps.make_train_step(cfg, opt_cfg, rules,
+                                   1 if delta_mode else nm,
+                                   accum_dtype=accum)
+        jitted = jax.jit(fn, in_shardings=(st_shard, b_shard),
+                         out_shardings=(st_shard, None),
+                         donate_argnums=(0,))
+        return jitted, (state, batch)
+
+    params_decl = api.params(cfg)
+    p_shard = steps.state_shardings(params_decl, mesh, rules)
+    params = abstract_params(params_decl, mesh, rules, jnp.bfloat16)
+
+    if plan.kind == "prefill":
+        fn = steps.make_prefill_step(cfg, rules)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        return jitted, (params, batch)
+
+    # decode
+    state_decl = api.decode_state(cfg, plan.batch, plan.seq)
+    st_shard = steps.state_shardings(state_decl, mesh, rules)
+    state = abstract_params(state_decl, mesh, rules, jnp.bfloat16)
+    fn = steps.make_decode_step(cfg, rules)
+    jitted = jax.jit(fn, in_shardings=(p_shard, st_shard, b_shard),
+                     out_shardings=(None, st_shard), donate_argnums=(1,))
+    return jitted, (params, state, batch)
+
+
+def _costs(compiled, n_dev):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    colls = rl.parse_collectives(compiled.as_text(), n_dev)
+    return dict(flops=float(ca.get("flops", 0.0)),
+                bytes=float(ca.get("bytes accessed", 0.0)),
+                coll=dict(colls.by_kind))
+
+
+def _combine(base, delta, n_extra):
+    out = dict(flops=base["flops"] + n_extra * delta["flops"],
+               bytes=base["bytes"] + n_extra * delta["bytes"], coll={})
+    kinds = set(base["coll"]) | set(delta["coll"])
+    for k in kinds:
+        out["coll"][k] = base["coll"].get(k, 0.0) \
+            + n_extra * delta["coll"].get(k, 0.0)
+    return out
+
+
+def delta_extrapolate(cfg, plan, mesh):
+    """Per-layer Δ-cost extrapolation (see module docstring)."""
+    n_dev = mesh.size
+    if cfg.family == "hybrid":
+        sizes = [1, 2, 3, 6]
+        c = {}
+        for L in sizes:
+            pat = cfg.block_pattern
+            sub = cfg.replace(n_layers=L)
+            jitted, args = build_cell(sub, plan, mesh, delta_mode=True)
+            with mesh:
+                c[L] = _costs(jitted.lower(*args).compile(), n_dev)
+        d_rec = _combine(c[2], c[1], -1)            # c2 - c1
+        d3 = _combine(c[6], c[3], -1)               # 2*rec + att
+        d_att = _combine(d3, d_rec, -2)
+        base = _combine(c[1], d_rec, -1)
+        n_att = sum(1 for i in range(cfg.n_layers)
+                    if cfg.pattern_at(i) == "att")
+        n_rec = cfg.n_layers - n_att
+        total = _combine(_combine(base, d_rec, n_rec), d_att, n_att)
+        return total
+    if cfg.family == "encdec":
+        c1 = _delta_compile(cfg.replace(enc_layers=1, dec_layers=1,
+                                        n_layers=2), plan, mesh)
+        c2 = _delta_compile(cfg.replace(enc_layers=2, dec_layers=2,
+                                        n_layers=4), plan, mesh)
+        delta = _combine(c2, c1, -1)
+        return _combine(c1, delta, cfg.enc_layers - 1)
+    c1 = _delta_compile(cfg.replace(n_layers=1), plan, mesh)
+    c2 = _delta_compile(cfg.replace(n_layers=2), plan, mesh)
+    delta = _combine(c2, c1, -1)
+    return _combine(c1, delta, cfg.n_layers - 1)
+
+
+def _delta_compile(cfg, plan, mesh):
+    jitted, args = build_cell(cfg, plan, mesh, delta_mode=True)
+    with mesh:
+        return _costs(jitted.lower(*args).compile(), mesh.size)
+
+
+def analytic_hbm_bytes(cfg, plan, mesh, rules, opt_cfg) -> float:
+    """Compulsory per-device HBM traffic per step (fused-TPU model).
+
+    The CPU backend's ``bytes accessed`` counts unfused operator traffic
+    and overestimates a fused TPU executable by ~10x, so the roofline
+    memory term uses this analytic minimum instead (HLO bytes are kept in
+    the record as an upper bound).  Terms:
+
+      train   n_micro * 2 * P  (fwd+bwd weight reads per microbatch)
+              + 2 * (P + Mu + Nu)   (optimizer read+write)
+              + 3 * Act             (save, bwd read, recompute write)
+              + logits traffic
+      prefill P + 2 * Act + KV-cache write
+      decode  P + KV/state read    (the classic decode bound)
+    """
+    p_dev = tree_bytes_per_dev(api.params(cfg), mesh, rules, 2)
+    baxes = rules.get("batch", ("pod", "data"))
+    baxes = (baxes,) if isinstance(baxes, str) else baxes
+    bshards = 1
+    for ax in baxes:
+        if ax in mesh.shape:
+            bshards *= mesh.shape[ax]
+    bshards = min(bshards, plan.batch)
+    d_act = cfg.d_inner if cfg.family == "ssm" else cfg.d_model
+    vocab_shards = mesh.shape.get("model", 1) if cfg.vocab % \
+        mesh.shape.get("model", 1) == 0 else 1
+
+    if plan.kind == "decode":
+        state_dev = tree_bytes_per_dev(
+            api.decode_state(cfg, plan.batch, plan.seq), mesh, rules, 2)
+        return p_dev + state_dev
+    tokens_dev = plan.batch * plan.seq / bshards
+    act = cfg.n_layers * tokens_dev * d_act * 2
+    logits = tokens_dev * (cfg.vocab / vocab_shards) * 4
+    if plan.kind == "train":
+        mom = 2 * p_dev * (1 if opt_cfg.moment_dtype == jnp.bfloat16 else 2)
+        return (plan.n_micro * 2 * p_dev + 2 * (p_dev + mom)
+                + 3 * act + 2 * logits)
+    cache_dev = tree_bytes_per_dev(
+        api.decode_state(cfg, plan.batch, plan.seq), mesh, rules, 2)
+    return p_dev + 2 * act + logits + cache_dev
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             skip_delta: bool = False) -> dict:
+    mod = registry.get(arch)
+    cfg, plan = mod.CONFIG, mod.PLANS[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}/{shape}/{mesh_name}"
+    if plan.skip:
+        return {"cell": cell_id, "status": "skip", "reason": plan.skip}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jitted, args = build_cell(cfg, plan, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    full = _costs(compiled, mesh.size)
+    row = {
+        "cell": cell_id, "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "n_devices": mesh.size,
+        "kind": plan.kind,
+        "memory": {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "peak_gib": (mem.temp_size_in_bytes
+                         + mem.argument_size_in_bytes) / 2**30,
+        },
+        "full_compile_costs": full,
+        "model_flops_total": registry.model_flops(cfg, plan),
+    }
+    if not skip_delta:
+        t1 = time.time()
+        row["costs"] = delta_extrapolate(cfg, plan, mesh)
+        row["delta_compile_s"] = round(time.time() - t1, 1)
+    else:
+        row["costs"] = full
+    rules = _rules(plan, mesh)
+    bytes_min = analytic_hbm_bytes(cfg.replace(dtype="bfloat16"), plan,
+                                   mesh, rules, _opt_cfg(plan))
+    row["hbm_bytes_hlo_upper"] = row["costs"]["bytes"]
+    row["hbm_bytes_analytic"] = bytes_min
+    terms = rl.RooflineTerms(
+        cell=cell_id,
+        flops_per_dev=row["costs"]["flops"],
+        hbm_bytes_per_dev=bytes_min,
+        coll_bytes_per_dev=sum(row["costs"]["coll"].values()),
+        coll_by_kind=row["costs"]["coll"],
+        peak_memory_bytes=(mem.temp_size_in_bytes
+                           + mem.argument_size_in_bytes),
+        model_flops_per_dev=row["model_flops_total"] / mesh.size,
+    )
+    row["roofline"] = terms.as_row()
+    return row
+
+
+_DEFAULT_OUT = None
+
+
+def _persist(results, out):
+    global _DEFAULT_OUT
+    if out is None:
+        if _DEFAULT_OUT is None:
+            _DEFAULT_OUT = os.path.join(os.path.abspath(ARTIFACTS),
+                                        f"dryrun_{int(time.time())}.json")
+        out = _DEFAULT_OUT
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--skip-delta", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    arch_list = registry.archs() if args.arch == "all" else [args.arch]
+    shape_list = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+                  if args.shape == "all" else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in arch_list:
+        for shape in shape_list:
+            for mp in meshes:
+                try:
+                    row = run_cell(arch, shape, multi_pod=mp,
+                                   skip_delta=args.skip_delta)
+                except Exception as e:  # a failure here is a system bug
+                    row = {"cell": f"{arch}/{shape}/"
+                           f"{'pod2x16x16' if mp else 'pod16x16'}",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                status = row["status"]
+                extra = ""
+                if status == "ok":
+                    r = row["roofline"]
+                    extra = (f" compile={row['compile_s']}s "
+                             f"peak={r['peak_memory_gib']:.2f}GiB "
+                             f"dom={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.3f}")
+                print(f"[{status}] {row['cell']}{extra}", flush=True)
+                if status == "error":
+                    print(row["trace"], flush=True)
+                results.append(row)
+                _persist(results, args.out)
+
+    out = _persist(results, args.out)
+    print("wrote", out)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"cells: {n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

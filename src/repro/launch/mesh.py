@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Called as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips.  Multi-pod: 2 x (16, 16) = 512.
+
+    The 'pod' axis composes with 'data' for batch/gradient sharding; the
+    'model' axis carries TP/EP/SP.  Scaling beyond 2 pods is increasing
+    the pod extent — no code changes.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (smoke tests / examples)."""
+    n = jax.device_count()
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))

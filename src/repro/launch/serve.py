@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy decode
+with the per-family state (KV caches / SSM states / ring buffers).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
+      --smoke --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.distributed import steps
+from repro.distributed.sharding import make_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.models.base import init_params
+
+
+def serve_batch(cfg, params, prompts: jnp.ndarray, gen: int, rules,
+                greedy: bool = True):
+    """prompts: (B, P) int32.  Returns (B, P+gen) generated sequences."""
+    b, p = prompts.shape
+    max_len = p + gen + 1
+    state = init_params(api.decode_state(cfg, b, max_len),
+                        jax.random.PRNGKey(0), jnp.float32)
+    decode = jax.jit(steps.make_decode_step(cfg, rules),
+                     donate_argnums=(1,))
+    seqs = [prompts]
+    # prefill token-by-token through the decode path (state-exact for every
+    # family; a fused prefill kernel is the production fast path)
+    tok = prompts[:, :1]
+    for t in range(1, max_len):
+        batch = {"tokens": tok,
+                 "cache_len": jnp.full((b,), t, jnp.int32)}
+        nxt, state = decode(params, state, batch)
+        if t < p:                      # still consuming the prompt
+            tok = prompts[:, t:t + 1]
+        else:
+            tok = nxt[:, None]
+            seqs.append(tok)
+        if len(seqs) == gen + 1:
+            break
+    return jnp.concatenate(seqs, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    mod = registry.get(args.arch)
+    cfg = (mod.SMOKE if args.smoke else mod.CONFIG).replace(dtype="float32")
+    if cfg.family == "encdec":
+        raise SystemExit("use examples/serve_lm.py for enc-dec serving")
+    rules = make_rules()
+    mesh = make_host_mesh(model=args.model_parallel)
+    with mesh:
+        params = init_params(api.params(cfg), jax.random.PRNGKey(0),
+                             jnp.float32)
+        prompts = jnp.asarray(
+            np.random.default_rng(0).integers(2, cfg.vocab,
+                                              (args.batch, args.prompt_len)),
+            jnp.int32)
+        t0 = time.time()
+        out = serve_batch(cfg, params, prompts, args.gen, rules)
+        out.block_until_ready()
+        dt = time.time() - t0
+    n_tok = args.batch * args.gen
+    print(f"arch={args.arch} generated {out.shape} in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s batch-aggregate)")
+    print("sample:", np.asarray(out[0])[:24])
+
+
+if __name__ == "__main__":
+    main()

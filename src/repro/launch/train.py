@@ -1,0 +1,127 @@
+"""Production training driver: config -> mesh -> pjit train loop with
+checkpoint/restart, straggler watchdog and metrics logging.
+
+Usage (CPU container: keep the model small):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 200 --batch 16 --seq 64 --ckpt-dir /tmp/ckpt
+
+Fault tolerance: every --ckpt-every steps the full train state + data
+iterator state is written atomically; on startup the latest checkpoint is
+restored automatically (exact resume — see tests/test_checkpoint.py).
+A watchdog tracks a step-time EMA and flags stragglers (in multi-host
+deployments the flag triggers requeue/despawn via the cluster manager;
+here it logs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data import DataConfig, SyntheticStream
+from repro.distributed import steps
+from repro.distributed.sharding import make_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models.base import init_params
+from repro.optim import AdamWConfig
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x the running EMA."""
+
+    def __init__(self, threshold: float = 3.0, alpha: float = 0.1):
+        self.ema = None
+        self.threshold = threshold
+        self.alpha = alpha
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.threshold * self.ema
+        self.ema = dt if self.ema is None else \
+            (1 - self.alpha) * self.ema + self.alpha * dt
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--task", default="copy")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    mod = registry.get(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    cfg = cfg.replace(dtype="float32")
+    rules = make_rules()
+    mesh = make_host_mesh(model=args.model_parallel)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=10,
+                          decay_steps=args.steps)
+    dc = DataConfig(batch=args.batch, seq=args.seq, vocab=cfg.vocab,
+                    task=args.task)
+
+    with mesh:
+        jstep, decl, st_shard = steps.jit_train_step(
+            cfg, opt_cfg, rules, mesh, n_micro=args.n_micro)
+        state = init_params(decl, jax.random.PRNGKey(0), jnp.float32)
+        stream = SyntheticStream(dc)
+
+        mgr = None
+        if args.ckpt_dir:
+            mgr = CheckpointManager(args.ckpt_dir)
+            restored, manifest = mgr.restore(state)
+            if restored is not None:
+                state = jax.tree.map(jnp.asarray, restored)
+                stream = SyntheticStream.from_state(
+                    dc, manifest["data_state"])
+                print(f"resumed from step {manifest['step']}")
+
+        watchdog = StragglerWatchdog()
+        start = int(state["step"])
+        for i in range(start, args.steps):
+            t0 = time.time()
+            batch = jax.tree.map(jnp.asarray, next(stream))
+            state, metrics = jstep(state, batch)
+            metrics["loss"].block_until_ready()
+            dt = time.time() - t0
+            if watchdog.observe(dt):
+                print(f"[watchdog] step {i} straggled: {dt:.3f}s "
+                      f"(ema {watchdog.ema:.3f}s)")
+            if i % args.log_every == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f} ms",
+                      flush=True)
+            if mgr and (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state,
+                         meta={"data_state": stream.state(),
+                               "arch": args.arch,
+                               "mesh": list(mesh.shape.values())})
+        if mgr:
+            mgr.save(args.steps, state,
+                     meta={"data_state": stream.state(),
+                           "arch": args.arch})
+    print(json.dumps({"final_loss": float(metrics["loss"]),
+                      "steps": args.steps,
+                      "straggler_flags": watchdog.flagged}))
+
+
+if __name__ == "__main__":
+    main()

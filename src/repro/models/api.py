@@ -1,0 +1,100 @@
+"""Unified model API: one entry point per (family x mode).
+
+``params(cfg)``                   -> Param declaration tree
+``forward(params, batch, cfg)``   -> (logits, aux)          [train/prefill]
+``decode(params, batch, state, cfg)`` -> (logits, new_state)
+``decode_state(cfg, batch, max_len)`` -> Param tree for the decode state
+
+Batch dict keys: ``tokens``/``labels`` (LM), plus ``vision`` (B, Nv, D)
+for VLM and ``src`` (B, Ls, D) for enc-dec.  Decode adds ``cache_len``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba, rglru, transformer
+from repro.models.base import Param
+from repro.models.config import ModelConfig
+
+
+def params(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return mamba.lm_params(cfg)
+    if cfg.family == "hybrid":
+        return rglru.lm_params(cfg)
+    if cfg.family == "encdec":
+        return transformer.encdec_params(cfg)
+    return transformer.lm_params(cfg)
+
+
+def forward(p, batch: dict, cfg: ModelConfig, rules: dict):
+    """Full-sequence forward (training / prefill).  Returns (logits, aux)."""
+    if cfg.family == "ssm":
+        logits, _, aux = mamba.lm_apply(p, batch["tokens"], cfg, rules)
+    elif cfg.family == "hybrid":
+        logits, _, aux = rglru.lm_apply(p, batch["tokens"], cfg, rules)
+    elif cfg.family == "encdec":
+        logits, _, _, aux = transformer.encdec_apply(
+            p, batch["src"], batch["tokens"], cfg, rules)
+    else:
+        logits, _, aux = transformer.lm_apply(
+            p, batch["tokens"], cfg, rules,
+            vision_embeds=batch.get("vision"))
+    return logits, aux
+
+
+def decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Param declaration tree for the decode-time state."""
+    if cfg.family == "ssm":
+        return mamba.make_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return rglru.make_state(cfg, batch)
+    state = {"caches": transformer.make_caches(cfg, batch, max_len)}
+    if cfg.family == "encdec":
+        state["caches"] = transformer.make_caches(cfg, batch, max_len,
+                                                  cfg.dec_layers)
+        state["cross"] = transformer.make_caches(cfg, batch,
+                                                 cfg.n_frontend_tokens or 1,
+                                                 cfg.dec_layers)
+    return state
+
+
+def decode(p, batch: dict, state, cfg: ModelConfig, rules: dict):
+    """One-token decode step.  batch: tokens (B, 1), cache_len (B,).
+
+    Returns (logits (B, 1, V), new_state).
+    """
+    cache_len = batch["cache_len"]
+    if cfg.family == "ssm":
+        dcfg = cfg.replace(unroll_layers=True)
+        logits, new_state, _ = mamba.lm_apply(
+            p, batch["tokens"], dcfg, rules,
+            state=state, cache_len=cache_len)
+        return logits, new_state
+    if cfg.family == "hybrid":
+        logits, new_state, _ = rglru.lm_apply(
+            p, batch["tokens"], cfg, rules, state=state,
+            cache_len=cache_len)
+        return logits, new_state
+    if cfg.family == "encdec":
+        logits, caches, cross, _ = transformer.encdec_apply(
+            p, None, batch["tokens"], cfg, rules,
+            caches=state["caches"], cache_len=cache_len,
+            cross_caches=state["cross"])
+        return logits, {"caches": caches, "cross": cross}
+    logits, caches, _ = transformer.lm_apply(
+        p, batch["tokens"], cfg, rules, caches=state["caches"],
+        cache_len=cache_len)
+    return logits, {"caches": caches}
+
+
+def loss_fn(logits: jax.Array, labels: jax.Array, aux=0.0,
+            aux_weight: float = 0.01):
+    """Mean next-token cross-entropy (+ MoE load-balance aux)."""
+    if logits.shape[1] != labels.shape[1]:       # VLM: vision prefix
+        logits = logits[:, -labels.shape[1]:]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux_weight * aux

@@ -1,0 +1,146 @@
+"""Minimal functional parameter framework with logical sharding axes.
+
+Parameters are declared as ``Param`` leaves in nested dicts.  The same
+declaration tree serves three consumers:
+
+  * smoke tests     — ``init_params`` materializes real arrays;
+  * the dry-run     — ``abstract_params`` builds ShapeDtypeStructs with
+                      NamedShardings, no allocation;
+  * the train step  — ``param_pspecs`` yields the PartitionSpec tree for
+                      in/out shardings.
+
+Logical axis names are resolved to mesh axes by the rules in
+``repro.distributed.sharding``; an axis whose size does not divide the
+mesh extent falls back to replication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = None                     # overrides the model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_params(tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Add a leading stacked-layers dim to every Param (for lax.scan)."""
+    def f(p: Param) -> Param:
+        return Param(shape=(n, *p.shape), axes=(axis_name, *p.axes),
+                     init=p.init, scale=p.scale, dtype=p.dtype)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def init_params(tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize real arrays (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, Param))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        dt = p.dtype or dtype
+        if p.init == "zeros":
+            v = jnp.zeros(p.shape, dt)
+        elif p.init == "ones":
+            v = jnp.ones(p.shape, dt)
+        else:
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            std = p.scale / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, p.shape, jnp.float32) * std).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree: Any, mesh, rules: dict, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStructs with NamedShardings — for .lower() without alloc."""
+    from jax.sharding import NamedSharding
+
+    def f(p: Param):
+        spec = resolve_spec(p.shape, p.axes, mesh, rules)
+        return jax.ShapeDtypeStruct(p.shape, p.dtype or dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def param_pspecs(tree: Any, mesh, rules: dict) -> Any:
+    from jax.sharding import PartitionSpec
+    def f(p: Param) -> PartitionSpec:
+        return resolve_spec(p.shape, p.axes, mesh, rules)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def resolve_spec(shape, axes, mesh, rules):
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    from jax.sharding import PartitionSpec
+    used: set = set()
+    entries = []
+    for size, name in zip(shape, axes):
+        mesh_axes = rules.get(name) if name else None
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # drop axes already used by another dim or not dividing the size
+        valid = []
+        extent = 1
+        for ax in mesh_axes:
+            if ax in used or ax not in mesh.shape:
+                continue
+            if size % (extent * mesh.shape[ax]) == 0:
+                valid.append(ax)
+                extent *= mesh.shape[ax]
+        if not valid:
+            entries.append(None)
+        else:
+            used.update(valid)
+            entries.append(tuple(valid) if len(valid) > 1 else valid[0])
+    return PartitionSpec(*entries)
+
+
+def tree_bytes_per_dev(tree: Any, mesh, rules, default_bytes: int = 2
+                       ) -> float:
+    """Per-device resident bytes of a Param tree under the given rules."""
+    total = 0.0
+    for p in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Param)):
+        spec = resolve_spec(p.shape, p.axes, mesh, rules)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in ((entry,) if isinstance(entry, str) else entry):
+                shards *= mesh.shape[ax]
+        nbytes = default_bytes
+        if p.dtype is not None:
+            nbytes = jnp.dtype(p.dtype).itemsize
+        size = 1
+        for s in p.shape:
+            size *= s
+        total += size * nbytes / shards
+    return total
+
+
+def shard_activation(x: jax.Array, axes: tuple, rules: dict, mesh=None):
+    """with_sharding_constraint by logical activation axes (inside jit)."""
+    from jax.sharding import NamedSharding
+    from jax._src.mesh import thread_resources
+    mesh = mesh or thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

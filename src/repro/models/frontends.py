@@ -1,0 +1,38 @@
+"""Modality frontend stubs (per assignment: [vlm]/[audio] entries specify
+the transformer BACKBONE only; the frontend provides precomputed patch /
+frame embeddings through ``input_specs()``).
+
+``reference_vision_stem`` is a *demonstration* patch-embed stem built on
+the trim_conv2d kernel — used by examples/cnn_inference.py, not by the
+dry-run path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def reference_vision_stem(images: jax.Array, patch_w: jax.Array,
+                          impl: str = "pallas") -> jax.Array:
+    """images: (N, H, W, 3); patch_w: (P, P, 3, D) -> (N, (H/P)*(W/P), D).
+
+    A patch-embed is a stride-P conv — the trim_conv2d kernel handles it
+    (non-overlapping windows: the carry path is simply never warm).
+    """
+    p = patch_w.shape[0]
+    feat = ops.conv2d(images, patch_w, stride=p, padding="valid", impl=impl)
+    n, hp, wp, d = feat.shape
+    return feat.reshape(n, hp * wp, d)
+
+
+def anyres_tile_count(image_hw: tuple[int, int], tile: int = 336,
+                      patch: int = 14) -> int:
+    """LLaVA-NeXT anyres: number of vision tokens for an image resolution
+    (base tile + grid tiles), used to size input_specs."""
+    h, w = image_hw
+    grid = (-(-h // tile)) * (-(-w // tile))
+    per_tile = (tile // patch) ** 2
+    return (1 + grid) * per_tile

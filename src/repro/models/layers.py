@@ -1,0 +1,295 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP, MoE.
+
+Every ``*_params`` function returns a tree of ``Param`` declarations with
+logical sharding axes; every ``*_apply`` function is pure and consumes the
+materialized (or abstract) tree.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.base import Param, shard_activation
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": Param((d,), ("act_embed",), init="ones",
+                        dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = Param((d,), ("act_embed",), init="zeros",
+                          dtype=jnp.float32)
+    return p
+
+
+def norm_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, L, H, D); positions: (B, L) or (L,)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, L, D/2)
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (self- or cross-), with optional KV cache
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": Param((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Param((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Param((h, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = Param((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = Param((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def attention_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict, *,
+                    positions: jax.Array | None = None,
+                    kv_cache: tuple | None = None,
+                    cache_len=None,
+                    causal: bool = True,
+                    window: int | None = None,
+                    encoder_out: jax.Array | None = None,
+                    is_cross: bool = False,
+                    use_rope: bool = True):
+    """Returns (y, new_kv_cache).
+
+    Modes:
+      * train / prefill:  kv_cache is None -> attends within ``x`` (or to
+        ``encoder_out`` for cross-attention); returns fresh (k, v).
+      * decode:           kv_cache=(k, v).  Self-attention appends the new
+        token at ``cache_len - 1``; cross-attention reads the static cache.
+    """
+    b, lq, _ = x.shape
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if is_cross and kv_cache is not None:
+        k = v = None                   # static encoder K/V: nothing to project
+    else:
+        kv_src = encoder_out if encoder_out is not None else x
+        k = jnp.einsum("bld,dhk->blhk", kv_src, p["wk"])
+        v = jnp.einsum("bld,dhk->blhk", kv_src, p["wv"])
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+    if use_rope and not is_cross:
+        if positions is None:
+            positions = jnp.arange(lq)[None]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", None, "heads", None), rules)
+
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        if not is_cross:              # self-attention decode: append token
+            idx = jnp.max(cache_len) - 1
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=1)
+            o = ops.decode_attention(q, kc, vc, cache_len,
+                                     soft_cap=cfg.logits_soft_cap,
+                                     window=window)
+        else:                          # cross-attention decode: static cache
+            o = ops.attention(q, kc, vc, causal=False,
+                              soft_cap=cfg.logits_soft_cap, impl="ref")
+        new_cache = (kc, vc)
+    else:
+        o = ops.attention(q, k, v, causal=causal and encoder_out is None,
+                          soft_cap=cfg.logits_soft_cap, window=window,
+                          impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        # train/prefill: do not thread caches through the stack (a scanned
+        # stack would materialize all-layer K/V; production prefill writes
+        # the cache seq-sharded instead — see EXPERIMENTS.md §Dry-run)
+        new_cache = None
+    y = jnp.einsum("blhk,hkd->bld", o, p["wo"])
+    return shard_activation(y, ("batch", "seq", "act_embed"), rules), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": Param((d, f), ("embed", "mlp")),
+                "w_up": Param((d, f), ("embed", "mlp")),
+                "w_down": Param((f, d), ("mlp", "embed"))}
+    return {"w_up": Param((d, f), ("embed", "mlp")),
+            "b_up": Param((f,), ("mlp",), init="zeros"),
+            "w_down": Param((f, d), ("mlp", "embed")),
+            "b_down": Param((d,), ("act_embed",), init="zeros")}
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    h = shard_activation(h, ("batch", None, "mlp"), rules)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return shard_activation(y, ("batch", "seq", "act_embed"), rules)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, capacity-grouped matmul)
+# ---------------------------------------------------------------------------
+
+def moe_params(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    p = {
+        "router": Param((d, e), ("embed", "experts"), scale=0.1),
+        "w_gate": Param((e, d, f), ("experts", "embed", "mlp")),
+        "w_up": Param((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": Param((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.shared_expert_dff:
+        p["shared"] = {
+            "w_gate": Param((d, cfg.shared_expert_dff), ("embed", "mlp")),
+            "w_up": Param((d, cfg.shared_expert_dff), ("embed", "mlp")),
+            "w_down": Param((cfg.shared_expert_dff, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict):
+    """GShard-style token-choice top-k with *grouped* capacity dispatch.
+
+    Tokens are grouped by sequence (the group dim is batch-sharded), so
+    every gather/scatter in the dispatch is a *batched* op over a sharded
+    leading dim — SPMD shards it instead of all-gathering the operands.
+    The expert einsum is (g, e, c, d) x (e, d, f) with g on the data axis
+    and e on the model axis (expert parallelism); the data->expert
+    boundary at the capacity buffer is the MoE all-to-all.  HLO flops
+    reflect the useful expert compute: T*k*cf * 3*D*F.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # decode (s == 1): a single group over the whole batch keeps the
+    # capacity waste bounded (cap ~ B*k/E instead of 1 per sequence).
+    xg = x.reshape(1, b, d) if s == 1 else x
+    g, tg, _ = xg.shape
+    xg = shard_activation(xg, ("batch", None, None), rules)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (g, tg, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9)                     # renormalize
+
+    cap = max(int(math.ceil(tg * k / e * cfg.capacity_factor)), 1)
+
+    def _dispatch_one(xg1, idx1, val1):
+        """One group: sort tokens by expert, scatter into capacity slots.
+
+        vmapped over groups so every gather/scatter carries an explicit
+        batch dim that the SPMD partitioner shards (a flat multi-dim
+        scatter would be replicated on every device).
+        """
+        flat_e = idx1.reshape(tg * k)
+        flat_t = jnp.repeat(jnp.arange(tg), k)
+        flat_g = val1.reshape(tg * k).astype(x.dtype)
+        order = jnp.argsort(flat_e)                            # stable
+        seg, tok, gts = flat_e[order], flat_t[order], flat_g[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(tg * k) - starts[seg]
+        keep = rank < cap
+        slot = jnp.where(keep, seg * cap + rank, e * cap)      # overflow
+        rows = xg1[tok] * keep[:, None].astype(x.dtype)
+        buf1 = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(rows)
+        return buf1[:-1], slot, tok, gts, keep, counts
+
+    buf, slot, tok, gts, keep, counts = jax.vmap(_dispatch_one)(
+        xg, gate_idx, gate_vals)
+    buf = buf.reshape(g, e, cap, d)
+    # the data->expert all-to-all boundary (expert parallelism)
+    buf = shard_activation(buf, ("batch", "experts", None, None), rules)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = shard_activation(h, ("batch", "experts", None, "mlp"), rules)
+    yexp = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    yexp = shard_activation(yexp, ("batch", "experts", None, None), rules)
+
+    def _combine_one(yexp1, slot1, tok1, gts1, keep1):
+        back = yexp1.reshape(e * cap, d)[jnp.clip(slot1, 0, e * cap - 1)]
+        contrib = jnp.where(keep1[:, None], back, 0.0) * gts1[:, None]
+        return jnp.zeros((tg, d), x.dtype).at[tok1].add(contrib)
+
+    y = jax.vmap(_combine_one)(yexp, slot, tok, gts, keep)
+    y = shard_activation(y, ("batch", None, None), rules)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xg, cfg, rules)
+
+    # load-balancing auxiliary loss (Switch-style), averaged over groups
+    me = probs.mean(axis=1)                                    # (g, e)
+    ce = counts.astype(jnp.float32) / (tg * k)                 # (g, e)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return (shard_activation(y.reshape(b, s, d),
+                             ("batch", "seq", "act_embed"), rules), aux)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embedding_params(cfg: ModelConfig) -> dict:
+    p = {"embed": Param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                        scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = Param((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return p
+
+
+def embed_apply(p: dict, tokens: jax.Array, cfg: ModelConfig, rules: dict):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    return shard_activation(x, ("batch", "seq", "act_embed"), rules)
+
+
+def head_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict):
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w
+    return shard_activation(logits, ("batch", None, "vocab"), rules)

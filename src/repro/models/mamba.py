@@ -1,0 +1,187 @@
+"""Mamba-1 (falcon-mamba-7b family): selective SSM with causal conv1d.
+
+The temporal conv uses the ``trim_conv1d`` dataflow (Pallas on TPU; the
+jnp oracle under jit elsewhere).  The selective scan is evaluated with a
+*chunked associative scan*: the sequence is split into chunks; within a
+chunk a log-depth ``jax.lax.associative_scan`` runs (flop-countable, no
+while loop); the (B, D_inner, S) boundary state is carried across chunks.
+This is the TPU-friendly image of the CUDA selective-scan kernel: the
+(B, L, D_inner, S) tensor is only ever materialized one chunk at a time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.base import Param, shard_activation, stack_params
+from repro.models.config import ModelConfig
+
+
+def mixer_params(cfg: ModelConfig) -> dict:
+    d, din, s, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return {
+        "w_in": Param((d, 2 * din), ("embed", "mlp")),
+        "conv_w": Param((cfg.d_conv, din), (None, "mlp"), scale=0.5),
+        "conv_b": Param((din,), ("mlp",), init="zeros"),
+        "w_x": Param((din, r + 2 * s), ("mlp", None)),
+        "w_dt": Param((r, din), (None, "mlp")),
+        "dt_bias": Param((din,), ("mlp",), init="zeros"),
+        "a_log": Param((din, s), ("mlp", None), init="ones"),
+        "d_skip": Param((din,), ("mlp",), init="ones"),
+        "w_out": Param((din, d), ("mlp", "embed")),
+    }
+
+
+def _scan_chunk(a, bx, h0):
+    """Associative scan within one chunk.  a, bx: (B, C, Din, S)."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    a_cum, h_local = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = h_local + a_cum * h0[:, None]
+    return h, h[:, -1]
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict,
+              h0: jax.Array | None = None):
+    """Selective scan.  x: (B, L, Din) post-conv/SiLU activations.
+
+    Returns (y (B, L, Din), h_last (B, Din, S)).
+    """
+    b, length, din = x.shape
+    s = cfg.ssm_state
+    x_dbl = x @ p["w_x"]
+    dt, bmat, cmat = jnp.split(x_dbl, [cfg.dt_rank, cfg.dt_rank + s], axis=-1)
+    dt = jax.nn.softplus(dt @ p["w_dt"] + p["dt_bias"])       # (B, L, Din)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (Din, S)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, din, s), jnp.float32)
+    chunk = min(cfg.scan_chunk, length)
+    n_chunks = -(-length // chunk)
+    pad = n_chunks * chunk - length
+
+    def one_chunk(h0, dt_c, x_c, b_c, c_c):
+        a_bar = jnp.exp(dt_c[..., None] * a)                  # (B,C,Din,S)
+        bx = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+        h, h_last = _scan_chunk(a_bar, bx, h0)
+        return jnp.einsum("bcds,bcs->bcd", h, c_c), h_last
+
+    if cfg.unroll_layers:
+        # Δ-cost mode: Python loop so HloCostAnalysis sees every chunk
+        ys = []
+        for ic in range(n_chunks):
+            sl = slice(ic * chunk, min((ic + 1) * chunk, length))
+            y_c, h0 = one_chunk(h0, dt[:, sl].astype(jnp.float32),
+                                x[:, sl].astype(jnp.float32),
+                                bmat[:, sl].astype(jnp.float32),
+                                cmat[:, sl].astype(jnp.float32))
+            ys.append(y_c)
+        y = jnp.concatenate(ys, axis=1).astype(x.dtype)
+    else:
+        def resh(t):
+            tp = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+            return tp.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+
+        def body(carry, xs):
+            y_c, h_last = jax.checkpoint(one_chunk)(carry, *xs)
+            return h_last, y_c
+
+        h0, ys = jax.lax.scan(body, h0, (resh(dt), resh(x),
+                                         resh(bmat), resh(cmat)))
+        y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, din)
+        y = y[:, :length].astype(x.dtype)
+    y = y + x * p["d_skip"]
+    return y, h0
+
+
+def mixer_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict, *,
+                state=None):
+    """Full mamba mixer.  state=(conv_state, ssm_state) enables decode mode
+    (L == 1); returns (y, new_state)."""
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard_activation(xin, ("batch", None, "mlp"), rules)
+    if state is None:
+        xc = ops.depthwise_conv1d(xin, p["conv_w"], impl="ref") + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        y, h_last = ssm_apply(p, xc, cfg, rules)
+        new_state = None
+    else:
+        conv_state, h0 = state
+        conv_state, xc = ops.depthwise_conv1d_step(
+            conv_state, xin[:, 0], p["conv_w"])
+        xc = jax.nn.silu(xc + p["conv_b"])[:, None]
+        y, h_last = ssm_apply(p, xc, cfg, rules, h0=h0)
+        new_state = (conv_state, h_last)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return shard_activation(out, ("batch", "seq", "act_embed"), rules), \
+        new_state
+
+
+def block_params(cfg: ModelConfig) -> dict:
+    return {"ln": L.norm_params(cfg), "mixer": mixer_params(cfg)}
+
+
+def lm_params(cfg: ModelConfig) -> dict:
+    return {
+        "tok": L.embedding_params(cfg),
+        "blocks": stack_params(block_params(cfg), cfg.n_layers),
+        "ln_f": L.norm_params(cfg),
+    }
+
+
+def make_state(cfg: ModelConfig, batch: int):
+    """Decode state per layer (stacked): conv window + SSM state."""
+    return {
+        "conv": Param((cfg.n_layers, batch, cfg.d_conv - 1, cfg.d_inner),
+                      ("layers", "batch", None, "mlp"), init="zeros"),
+        "ssm": Param((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                     ("layers", "batch", "mlp", None), init="zeros",
+                     dtype=jnp.float32),
+    }
+
+
+def lm_apply(params: dict, tokens: jax.Array, cfg: ModelConfig, rules: dict,
+             *, state=None, cache_len=None):
+    """tokens (B, S) -> logits.  ``state`` enables one-token decode."""
+    x = L.embed_apply(params["tok"], tokens, cfg, rules)
+
+    def one(pi, x, st):
+        y, new_st = mixer_apply(pi["mixer"], L.norm_apply(pi["ln"], x, cfg),
+                                cfg, rules, state=st)
+        return x + y, new_st
+
+    if cfg.remat:
+        one = jax.checkpoint(one,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers or state is not None:
+        new_conv, new_ssm = [], []
+        for i in range(cfg.n_layers):
+            pi = jax.tree.map(lambda a: a[i], params["blocks"])
+            st = None if state is None else \
+                (state["conv"][i], state["ssm"][i])
+            x, nst = one(pi, x, st)
+            if nst is not None:
+                new_conv.append(nst[0])
+                new_ssm.append(nst[1])
+        new_state = None
+        if new_conv:
+            new_state = {"conv": jnp.stack(new_conv),
+                         "ssm": jnp.stack(new_ssm)}
+    else:
+        def body(x, pi):
+            x, _ = one(pi, x, None)
+            return x, None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        new_state = None
+
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    logits = L.head_apply(params["tok"], x, cfg, rules)
+    return logits, new_state, 0.0

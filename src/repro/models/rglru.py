@@ -1,0 +1,187 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (cfg.block_pattern), e.g. ("rec", "rec", "att") for the 1:2
+attention:recurrent ratio.  The recurrent mixer is: linear branch + GeLU
+gate branch, temporal conv (trim_conv1d dataflow), RG-LRU diagonal
+recurrence evaluated with a single associative scan (state is (B, L, W) —
+no state dimension, so no chunking is needed), gated output projection.
+
+Local attention layers use a ring-buffer KV cache bounded by the window,
+which is what makes the 500k-token decode cell feasible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.base import Param, shard_activation
+from repro.models.config import ModelConfig
+
+_C = 8.0  # RG-LRU constant
+
+
+def rec_mixer_params(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "w_x": Param((d, w), ("embed", "mlp")),
+        "w_gate": Param((d, w), ("embed", "mlp")),
+        "conv_w": Param((cfg.d_conv, w), (None, "mlp"), scale=0.5),
+        "conv_b": Param((w,), ("mlp",), init="zeros"),
+        "w_a": Param((w, w), ("mlp", None), scale=0.1),
+        "b_a": Param((w,), ("mlp",), init="zeros"),
+        "w_i": Param((w, w), ("mlp", None), scale=0.1),
+        "b_i": Param((w,), ("mlp",), init="zeros"),
+        "lam": Param((w,), ("mlp",), init="ones"),
+        "w_out": Param((w, d), ("mlp", "embed")),
+    }
+
+
+def _rg_lru(xb, r, i, lam, h0=None):
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)."""
+    log_a = -_C * jax.nn.softplus(lam) * r                    # (B, L, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xb)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + a_cum * h0[:, None]
+    return h, h[:, -1]
+
+
+def rec_mixer_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict, *,
+                    state=None):
+    """state=(conv_state, h) -> decode mode.  Returns (y, new_state)."""
+    xb = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = shard_activation(xb, ("batch", None, "mlp"), rules)
+    if state is None:
+        xb = ops.depthwise_conv1d(xb, p["conv_w"], impl="ref") + p["conv_b"]
+        h0 = None
+        new_conv = None
+    else:
+        conv_state, h0 = state
+        new_conv, xb1 = ops.depthwise_conv1d_step(conv_state, xb[:, 0],
+                                                  p["conv_w"])
+        xb = (xb1 + p["conv_b"])[:, None]
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    h, h_last = _rg_lru(xf, r, i, p["lam"].astype(jnp.float32), h0=h0)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    y = shard_activation(y, ("batch", "seq", "act_embed"), rules)
+    return y, (None if state is None else (new_conv, h_last))
+
+
+def block_params(cfg: ModelConfig, kind: str) -> dict:
+    p = {"ln_mix": L.norm_params(cfg), "ln_mlp": L.norm_params(cfg),
+         "mlp": L.mlp_params(cfg)}
+    if kind == "att":
+        p["att"] = L.attention_params(cfg)
+    else:
+        p["rec"] = rec_mixer_params(cfg)
+    return p
+
+
+def lm_params(cfg: ModelConfig) -> dict:
+    blocks = {f"layer_{i}": block_params(cfg, cfg.pattern_at(i))
+              for i in range(cfg.n_layers)}
+    return {"tok": L.embedding_params(cfg), "blocks": blocks,
+            "ln_f": L.norm_params(cfg)}
+
+
+def make_state(cfg: ModelConfig, batch: int):
+    """Per-layer decode state: ring KV cache (att) or conv+LRU (rec)."""
+    w = cfg.lru_width or cfg.d_model
+    win = cfg.window
+    state = {}
+    for i in range(cfg.n_layers):
+        if cfg.pattern_at(i) == "att":
+            state[f"layer_{i}"] = {
+                "k": Param((batch, win, cfg.n_kv_heads, cfg.hd),
+                           ("batch", None, "kv_heads", None), init="zeros"),
+                "v": Param((batch, win, cfg.n_kv_heads, cfg.hd),
+                           ("batch", None, "kv_heads", None), init="zeros"),
+            }
+        else:
+            state[f"layer_{i}"] = {
+                "conv": Param((batch, cfg.d_conv - 1, w),
+                              ("batch", None, "mlp"), init="zeros"),
+                "h": Param((batch, w), ("batch", "mlp"), init="zeros",
+                           dtype=jnp.float32),
+            }
+    return state
+
+
+def lm_apply(params: dict, tokens: jax.Array, cfg: ModelConfig, rules: dict,
+             *, state=None, cache_len=None):
+    x = L.embed_apply(params["tok"], tokens, cfg, rules)
+    if cache_len is not None:
+        positions = jnp.reshape(cache_len, (-1, 1)) - 1
+    else:
+        positions = jnp.arange(x.shape[1])[None]
+    new_state = {} if state is not None else None
+
+    def att_layer(pi, x, st):
+        h = L.norm_apply(pi["ln_mix"], x, cfg)
+        if st is None:
+            y, _ = L.attention_apply(pi["att"], h, cfg, rules,
+                                     positions=positions, causal=True,
+                                     window=cfg.window)
+            nst = None
+        else:
+            # ring-buffer insert at (pos - 1) mod window; attention over the
+            # valid prefix min(pos, window) — permutation-invariant in keys.
+            pos = jnp.max(cache_len)
+            q = jnp.einsum("bld,dhk->blhk", h, pi["att"]["wq"])
+            k = jnp.einsum("bld,dhk->blhk", h, pi["att"]["wk"])
+            v = jnp.einsum("bld,dhk->blhk", h, pi["att"]["wv"])
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            slot = (pos - 1) % cfg.window
+            kc = jax.lax.dynamic_update_slice_in_dim(st["k"], k, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(st["v"], v, slot, axis=1)
+            o = ops.decode_attention(q, kc, vc,
+                                     jnp.minimum(cache_len, cfg.window),
+                                     soft_cap=cfg.logits_soft_cap)
+            y = jnp.einsum("blhk,hkd->bld", o, pi["att"]["wo"])
+            nst = {"k": kc, "v": vc}
+        x = x + y
+        h = L.mlp_apply(pi["mlp"], L.norm_apply(pi["ln_mlp"], x, cfg),
+                        cfg, rules)
+        return x + h, nst
+
+    def rec_layer(pi, x, st):
+        h = L.norm_apply(pi["ln_mix"], x, cfg)
+        y, nst = rec_mixer_apply(pi["rec"], h, cfg, rules,
+                                 state=None if st is None else
+                                 (st["conv"], st["h"]))
+        x = x + y
+        h = L.mlp_apply(pi["mlp"], L.norm_apply(pi["ln_mlp"], x, cfg),
+                        cfg, rules)
+        nst_d = None if nst is None else {"conv": nst[0], "h": nst[1]}
+        return x + h, nst_d
+
+    for i in range(cfg.n_layers):
+        pi = params["blocks"][f"layer_{i}"]
+        st = None if state is None else state[f"layer_{i}"]
+        fn = att_layer if cfg.pattern_at(i) == "att" else rec_layer
+        if cfg.remat and state is None:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        x, nst = fn(pi, x, st)
+        if new_state is not None:
+            new_state[f"layer_{i}"] = nst
+
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    logits = L.head_apply(params["tok"], x, cfg, rules)
+    if cfg.logits_soft_cap:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    return logits, new_state, 0.0

@@ -1,0 +1,216 @@
+"""Decoder-only LM (dense / MoE / VLM) and encoder-decoder stacks."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import Param, shard_activation, stack_params
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# One decoder block
+# ---------------------------------------------------------------------------
+
+def block_params(cfg: ModelConfig, cross: bool = False) -> dict:
+    p = {
+        "ln_att": L.norm_params(cfg),
+        "att": L.attention_params(cfg),
+        "ln_mlp": L.norm_params(cfg),
+    }
+    if cross:
+        p["ln_cross"] = L.norm_params(cfg)
+        p["cross"] = L.attention_params(cfg)
+    if cfg.family == "moe":
+        p["moe"] = L.moe_params(cfg)
+    else:
+        p["mlp"] = L.mlp_params(cfg)
+    return p
+
+
+def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict, *,
+                positions=None, kv_cache=None, cache_len=None,
+                causal: bool = True, encoder_out=None, cross_cache=None):
+    """Returns (x, new_kv_cache, new_cross_cache, aux_loss)."""
+    h, new_cache = L.attention_apply(
+        p["att"], L.norm_apply(p["ln_att"], x, cfg), cfg, rules,
+        positions=positions, kv_cache=kv_cache, cache_len=cache_len,
+        causal=causal, window=cfg.window)
+    x = x + h
+    new_cross = cross_cache
+    if encoder_out is not None or cross_cache is not None:
+        h, new_cross = L.attention_apply(
+            p["cross"], L.norm_apply(p["ln_cross"], x, cfg), cfg, rules,
+            encoder_out=encoder_out, kv_cache=cross_cache,
+            is_cross=True, causal=False, use_rope=False)
+        x = x + h
+    z = L.norm_apply(p["ln_mlp"], x, cfg)
+    if cfg.family == "moe":
+        h, aux = L.moe_apply(p["moe"], z, cfg, rules)
+    else:
+        h, aux = L.mlp_apply(p["mlp"], z, cfg, rules), 0.0
+    return x + h, new_cache, new_cross, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked decoder (scan or unrolled)
+# ---------------------------------------------------------------------------
+
+def _run_blocks(blocks_p, x, cfg: ModelConfig, rules, *, positions,
+                caches, cache_len, causal=True, encoder_out=None,
+                cross_caches=None, n_layers=None):
+    """Run the layer stack.  caches/cross_caches: stacked (L, ...) or None."""
+    n = n_layers or cfg.n_layers
+    aux_total = 0.0
+
+    def one(pi, x, ci, xci):
+        return block_apply(pi, x, cfg, rules, positions=positions,
+                           kv_cache=ci, cache_len=cache_len, causal=causal,
+                           encoder_out=encoder_out, cross_cache=xci)
+
+    if cfg.remat:
+        one = jax.checkpoint(one,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers:
+        new_caches, new_cross = [], []
+        for i in range(n):
+            pi = jax.tree.map(lambda a: a[i], blocks_p)
+            ci = jax.tree.map(lambda a: a[i], caches) if caches is not None \
+                else None
+            xci = jax.tree.map(lambda a: a[i], cross_caches) \
+                if cross_caches is not None else None
+            x, nc, nxc, aux = one(pi, x, ci, xci)
+            aux_total += aux
+            new_caches.append(nc)
+            new_cross.append(nxc)
+        stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst) \
+            if lst and lst[0] is not None else None
+        return x, stack(new_caches), stack(new_cross), aux_total
+
+    def body(carry, xs):
+        x, aux = carry
+        pi, ci, xci = xs
+        x, nc, nxc, a = one(pi, x, ci, xci)
+        return (x, aux + a), (nc, nxc)
+
+    (x, aux_total), (new_caches, new_cross) = jax.lax.scan(
+        body, (x, 0.0), (blocks_p, caches, cross_caches))
+    return x, new_caches, new_cross, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM
+# ---------------------------------------------------------------------------
+
+def lm_params(cfg: ModelConfig) -> dict:
+    p = {
+        "tok": L.embedding_params(cfg),
+        "blocks": stack_params(block_params(cfg), cfg.n_layers),
+        "ln_f": L.norm_params(cfg),
+    }
+    if cfg.frontend == "vision":
+        p["vision_proj"] = Param((cfg.d_model, cfg.d_model),
+                                 ("embed", "act_embed"))
+    return p
+
+
+def make_caches(cfg: ModelConfig, batch: int, max_len: int,
+                n_layers: int | None = None):
+    """Abstract/zero KV caches, stacked over layers."""
+    n = n_layers or cfg.n_layers
+    shape = (n, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    axes = ("layers", "batch", "seq", "kv_heads", None)
+    return {"k": Param(shape, axes, init="zeros"),
+            "v": Param(shape, axes, init="zeros")}
+
+
+def lm_apply(params: dict, tokens: jax.Array, cfg: ModelConfig, rules: dict,
+             *, positions=None, caches=None, cache_len=None,
+             vision_embeds=None):
+    """tokens: (B, S) -> logits (B, S[+Nv], vocab).
+
+    decode mode: S == 1 with ``caches``/``cache_len`` set.
+    """
+    x = L.embed_apply(params["tok"], tokens, cfg, rules)
+    if vision_embeds is not None:
+        v = vision_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([v, x], axis=1)
+    if positions is None:
+        if cache_len is not None:
+            positions = (jnp.reshape(cache_len, (-1, 1)) - 1)
+        else:
+            positions = jnp.arange(x.shape[1])[None]
+    cache_tuples = (caches["k"], caches["v"]) if caches is not None else None
+    x, new_caches, _, aux = _run_blocks(
+        params["blocks"], x, cfg, rules, positions=positions,
+        caches=cache_tuples, cache_len=cache_len)
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    logits = L.head_apply(params["tok"], x, cfg, rules)
+    if cfg.logits_soft_cap:
+        logits = cfg.logits_soft_cap * jnp.tanh(
+            logits / cfg.logits_soft_cap)
+    out_caches = None
+    if new_caches is not None:
+        out_caches = {"k": new_caches[0], "v": new_caches[1]}
+    return logits, out_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t backbone; frontend is a stub)
+# ---------------------------------------------------------------------------
+
+def encdec_params(cfg: ModelConfig) -> dict:
+    enc_cfg = cfg
+    return {
+        "tok": L.embedding_params(cfg),
+        "enc_blocks": stack_params(block_params(enc_cfg), cfg.enc_layers),
+        "enc_ln": L.norm_params(cfg),
+        "dec_blocks": stack_params(block_params(cfg, cross=True),
+                                   cfg.dec_layers),
+        "dec_ln": L.norm_params(cfg),
+    }
+
+
+def encdec_apply(params: dict, src_embeds: jax.Array, tgt_tokens: jax.Array,
+                 cfg: ModelConfig, rules: dict, *, caches=None,
+                 cache_len=None, cross_caches=None):
+    """src_embeds: (B, Ls, D) frame embeddings from the audio stub.
+
+    Training/prefill: full encoder + causal decoder.
+    Decode: ``caches`` for decoder self-attn, ``cross_caches`` holding the
+    projected encoder K/V (encoder is not re-run).
+    """
+    enc = None
+    if cross_caches is None:
+        enc = shard_activation(src_embeds, ("batch", "seq", "act_embed"),
+                               rules)
+        enc, _, _, _ = _run_blocks(params["enc_blocks"], enc, cfg, rules,
+                                   positions=jnp.arange(enc.shape[1])[None],
+                                   caches=None, cache_len=None, causal=False,
+                                   n_layers=cfg.enc_layers)
+        enc = L.norm_apply(params["enc_ln"], enc, cfg)
+
+    x = L.embed_apply(params["tok"], tgt_tokens, cfg, rules)
+    if cache_len is not None:
+        positions = jnp.reshape(cache_len, (-1, 1)) - 1
+    else:
+        positions = jnp.arange(x.shape[1])[None]
+    cache_tuples = (caches["k"], caches["v"]) if caches is not None else None
+    xc = (cross_caches["k"], cross_caches["v"]) if cross_caches is not None \
+        else None
+    x, new_caches, new_cross, aux = _run_blocks(
+        params["dec_blocks"], x, cfg, rules, positions=positions,
+        caches=cache_tuples, cache_len=cache_len, causal=True,
+        encoder_out=enc, cross_caches=xc, n_layers=cfg.dec_layers)
+    x = L.norm_apply(params["dec_ln"], x, cfg)
+    logits = L.head_apply(params["tok"], x, cfg, rules)
+    out_c = {"k": new_caches[0], "v": new_caches[1]} if new_caches is not None \
+        else None
+    out_xc = {"k": new_cross[0], "v": new_cross[1]} if new_cross is not None \
+        else None
+    return logits, out_c, out_xc, aux

@@ -1,0 +1,94 @@
+"""Analytical model tests: Fig. 1 curve, Fig. 6 bands, Table I, GeMM."""
+
+import math
+
+import pytest
+
+from repro.core import model as m
+from repro.core import energy
+
+
+def test_fig1_overhead_shape():
+    """Overhead decreases with ifmap size and is largest for small ifmaps
+    (the paper's motivation: deep-CNN layers suffer most)."""
+    curve = m.fig1_curve()
+    sizes = sorted(curve)
+    vals = [curve[s] for s in sizes]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert curve[14] == pytest.approx(100 * (11 * 4) / 196)   # 22.45%
+    assert curve[224] == pytest.approx(100 * (221 * 4) / (224 * 224))
+
+
+def test_3dtrim_zero_overhead():
+    for s in (14, 28, 224):
+        assert m.ifmap_reads_per_channel(s, s, 3, 1, shadow=True) == s * s
+
+
+def test_fig6_vgg16_band():
+    """Improvement over TrIM for every VGG-16 layer is ~3x (paper band:
+    2.82-3.37x; our counting assumptions land at 3.2-3.45x — see
+    EXPERIMENTS.md for the assumption-by-assumption comparison)."""
+    rows = m.fig6("vgg16")
+    assert len(rows) == 13
+    for r in rows:
+        assert 2.8 <= r["improvement"] <= 3.6, r
+        assert r["3d-trim"] > r["trim"]
+
+
+def test_fig6_alexnet_band():
+    rows = m.fig6("alexnet")
+    assert len(rows) == 5
+    for r in rows:
+        assert r["improvement"] > 1.4, r
+
+
+def test_slice_normalization():
+    """3D-TrIM does the same work with 2.6x fewer slices (paper §III)."""
+    assert m.TRIM.slices / m.TRIM_3D.slices == pytest.approx(2.625)
+    assert m.TRIM_3D.pes == 576
+    assert m.TRIM_3D.peak_tops == pytest.approx(1.152)   # 1.15 TOPS
+
+
+def test_kernel_tiling():
+    assert m.num_subkernels(3) == 1
+    assert m.num_subkernels(5) == 4      # §III: 5x5 -> four 3x3 sub-kernels
+    assert m.num_subkernels(11) == 16
+
+
+def test_gemm_baseline_worse():
+    """im2col redundancy: GeMM-based accesses exceed 3D-TrIM's on every
+    VGG layer (the paper's motivation for Conv-based SAs)."""
+    for layer in m.vgg16_layers():
+        conv = m.layer_accesses(layer, m.TRIM_3D).total
+        gemm = m.gemm_accesses(layer)
+        assert gemm > conv
+
+
+def test_table1_reproduction():
+    """Normalized Table I values (DeepScaleTool factors recovered from the
+    paper's own raw/normalized pairs)."""
+    rows = {r["name"]: r for r in energy.table1()}
+    tri = rows["3d-trim (this work)"]
+    assert tri["norm_energy_eff_tops_per_w"] == pytest.approx(4.6, abs=0.15)
+    assert tri["norm_area_eff_tops_per_mm2"] == pytest.approx(4.42, abs=0.1)
+    tpu = rows["tpu-v4i [18]"]
+    assert tpu["norm_tops"] == pytest.approx(117.55, rel=0.01)
+    assert tpu["norm_power_w"] == pytest.approx(399.54, rel=0.01)
+    eye = rows["eyeriss [12]"]
+    assert eye["norm_tops"] == pytest.approx(0.11, abs=0.01)
+    mp = rows["multi-precision SA [11]"]
+    assert mp["norm_area_mm2"] == pytest.approx(76.12, rel=0.01)
+    # the headline: 3D-TrIM tops both efficiency columns
+    for r in rows.values():
+        if r["name"] != "3d-trim (this work)":
+            assert tri["norm_energy_eff_tops_per_w"] > \
+                r["norm_energy_eff_tops_per_w"]
+            assert tri["norm_area_eff_tops_per_mm2"] > \
+                r["norm_area_eff_tops_per_mm2"]
+
+
+def test_energy_model_memory_dominates():
+    """Horowitz [3]: external access energy dominates compute by orders of
+    magnitude — the architectural motivation."""
+    rep = energy.energy_per_inference("vgg16", m.TRIM_3D)
+    assert rep["memory_uJ"] / rep["total_uJ"] > 0.5

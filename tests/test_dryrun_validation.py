@@ -1,0 +1,104 @@
+"""Validation of the dry-run methodology itself.
+
+1. Δ-extrapolation (cost(1) + (L-1)*(cost(2)-cost(1))) is validated against
+   a fully-unrolled compile of a small arch — run in a subprocess so it can
+   own its XLA device-count flag.
+2. A miniature production-mesh lower+compile must show the expected
+   collective kinds.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import sys, json
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+from repro.configs.shapes import ShapePlan
+from repro.launch import dryrun
+from repro.models import ModelConfig
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = ModelConfig(family="dense", n_layers=6, d_model=128, n_heads=8,
+                  n_kv_heads=4, d_ff=256, vocab=512, attn_impl="chunked",
+                  attn_chunk=64)
+plan = ShapePlan("t", "train", batch=16, seq=128)
+
+# Δ-extrapolated
+extrap = dryrun.delta_extrapolate(cfg, plan, mesh)
+
+# ground truth: fully unrolled 6 layers
+truth = dryrun._delta_compile(cfg, plan, mesh)
+
+print(json.dumps({
+    "extrap_flops": extrap["flops"], "true_flops": truth["flops"],
+    "extrap_bytes": extrap["bytes"], "true_bytes": truth["bytes"],
+    "extrap_coll": sum(extrap["coll"].values()),
+    "true_coll": sum(truth["coll"].values()),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_delta_extrapolation_matches_full_unroll(tmp_path):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, os.path.abspath(src)],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # at this toy scale (d=128) the fixed embed/logits overhead does not
+    # cancel perfectly across L=1/2/6 fusion choices: measured deviations
+    # are ~7% flops / ~14% bytes / ~1% collectives; at production layer
+    # sizes the per-layer terms dominate and the deviation shrinks.
+    assert res["extrap_flops"] == pytest.approx(res["true_flops"], rel=0.12)
+    assert res["extrap_bytes"] == pytest.approx(res["true_bytes"], rel=0.20)
+    assert res["extrap_coll"] == pytest.approx(res["true_coll"], rel=0.10)
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import sys, json
+sys.path.insert(0, sys.argv[1])
+import jax
+from repro.core import roofline as rl
+from repro.configs.shapes import ShapePlan
+from repro.launch import dryrun
+from repro.models import ModelConfig
+
+mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=128, n_heads=8,
+                  n_kv_heads=4, d_ff=256, vocab=512, attn_impl="chunked",
+                  attn_chunk=64)
+plan = ShapePlan("t", "train", batch=16, seq=128, fsdp=True)
+jitted, args = dryrun.build_cell(cfg, plan, mesh)
+with mesh:
+    compiled = jitted.lower(*args).compile()
+stats = rl.parse_collectives(compiled.as_text(), mesh.size)
+mem = compiled.memory_analysis()
+print(json.dumps({"kinds": sorted(stats.by_kind),
+                  "temp": mem.temp_size_in_bytes}))
+"""
+
+
+@pytest.mark.slow
+def test_multipod_mesh_compile_has_collectives():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT, os.path.abspath(src)],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # TP psums and FSDP weight gathers must both be present
+    assert "all-reduce" in res["kinds"]
+    assert "all-gather" in res["kinds"]
+    assert res["temp"] > 0

@@ -1,0 +1,62 @@
+"""Roofline machinery: HLO collective parsing, term arithmetic."""
+
+import pytest
+
+from repro.core import roofline as rl
+
+HLO = """
+HloModule jit_train_step, is_scheduled=true
+
+%fused_computation { ... }
+
+ENTRY %main.1 (p0: bf16[16,4096,128]) -> bf16[16,4096,128] {
+  %ar = bf16[16,4096,128]{2,1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[4,16]<=[64], dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%z), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ars = bf16[4,4]{1,0} all-reduce-start(%v), replica_groups={{0,1,2,3,4,5,6,7}}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    stats = rl.parse_collectives(HLO, 64)
+    # all-reduce: 16*4096*128*2 bytes, group 4 -> wire 2*S*3/4
+    s_ar = 16 * 4096 * 128 * 2
+    assert stats.by_kind["all-reduce"] == pytest.approx(
+        2 * s_ar * 3 / 4 + 2 * (4 * 4 * 2) * 7 / 8)
+    # all-gather: result 64*128*2 bytes, iota group size 16
+    s_ag = 64 * 128 * 2
+    assert stats.by_kind["all-gather"] == pytest.approx(s_ag * 15 / 16)
+    # reduce-scatter: result 8*128*4 bytes, group 2 -> wire S_out*(g-1)
+    assert stats.by_kind["reduce-scatter"] == pytest.approx(8 * 128 * 4 * 1)
+    # collective-permute: point-to-point
+    assert stats.by_kind["collective-permute"] == pytest.approx(32 * 32 * 2)
+
+
+def test_parse_ignores_non_collectives():
+    stats = rl.parse_collectives(
+        "%d = f32[4,4] dot(%a, %b), lhs_contracting_dims={1}", 8)
+    assert stats.total_bytes == 0
+
+
+def test_roofline_terms_and_dominance():
+    t = rl.RooflineTerms(cell="x", flops_per_dev=197e12,
+                         hbm_bytes_per_dev=819e9 / 2,
+                         coll_bytes_per_dev=50e9 / 4, coll_by_kind={},
+                         model_flops_per_dev=98.5e12)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(0.5)
+    assert t.t_collective == pytest.approx(0.25)
+    assert t.dominant == "compute"
+    assert t.step_time_s == pytest.approx(1.0)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_markdown_table():
+    t = rl.RooflineTerms(cell="a/b/c", flops_per_dev=1e12,
+                         hbm_bytes_per_dev=1e9, coll_bytes_per_dev=1e9,
+                         coll_by_kind={}, model_flops_per_dev=5e11)
+    md = rl.markdown_table([t])
+    assert "a/b/c" in md and "|" in md

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests: train a tiny LM on the learnable synthetic
+task, checkpoint mid-run, serve greedily from the trained weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticStream
+from repro.distributed import steps
+from repro.distributed.sharding import make_rules
+from repro.models import ModelConfig, api
+from repro.models.base import init_params
+from repro.optim import AdamWConfig
+
+RULES = make_rules()
+
+
+def test_end_to_end_train_checkpoint_serve(tmp_path):
+    cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=160, vocab=32, attn_impl="ref",
+                      remat=False)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, decay_steps=200)
+    dc = DataConfig(batch=16, seq=32, vocab=32, task="copy", seed=0)
+    stream = SyntheticStream(dc)
+    step = jax.jit(steps.make_train_step(cfg, opt, RULES))
+    state = init_params(steps.train_state_decl(cfg, opt),
+                        jax.random.PRNGKey(0), jnp.float32)
+
+    mgr = CheckpointManager(str(tmp_path))
+    losses = []
+    for i in range(60):
+        batch = jax.tree.map(jnp.asarray, next(stream))
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i == 20:
+            mgr.save(i, state, meta={"data_state": stream.state()})
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+    assert mgr.latest_step() == 20
+
+    # greedy serving from the trained weights: the copy task is predictable
+    # in its second half, so decode should reproduce the copied prefix.
+    params = state["params"]
+    toks = jax.tree.map(jnp.asarray, next(stream))["tokens"][:2]
+    half = 16
+    prefix = toks[:, :half]
+    logits, _ = api.forward(params, {"tokens": prefix}, cfg, RULES)
+    # teacher-forced continuation accuracy on the copy region
+    full_logits, _ = api.forward(params, {"tokens": toks}, cfg, RULES)
+    pred = jnp.argmax(full_logits[:, half - 1:-1], -1)
+    target = toks[:, half:]
+    acc = float((pred == target).mean())
+    assert acc > 0.10, f"copy accuracy {acc} (chance ~1/32)"
+
+
+def test_decode_step_jit_and_state_donation():
+    cfg = ModelConfig(family="dense", n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=1, d_ff=64, vocab=32, attn_impl="ref",
+                      remat=False)
+    params = init_params(api.params(cfg), jax.random.PRNGKey(0), jnp.float32)
+    decode = jax.jit(steps.make_decode_step(cfg, RULES), donate_argnums=(1,))
+    state = init_params(api.decode_state(cfg, 2, 8), jax.random.PRNGKey(1),
+                        jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for t in range(1, 6):
+        batch = {"tokens": tok, "cache_len": jnp.full((2,), t, jnp.int32)}
+        nxt, state = decode(params, state, batch)
+        tok = nxt[:, None]
+    assert tok.shape == (2, 1)
+    assert int(tok.max()) < cfg.vocab

@@ -1,0 +1,113 @@
+"""Training-loop integration: loss decreases, microbatch equivalence,
+optimizer behaviour, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, make_batch
+from repro.distributed import steps
+from repro.distributed.sharding import make_rules
+from repro.models import ModelConfig
+from repro.models.base import init_params
+from repro.optim import AdamWConfig, adamw
+from repro.optim.compress import ef_quantize, _quantize_int8
+
+RULES = make_rules()
+CFG = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=64, attn_impl="ref",
+                  remat=False)
+
+
+def _state_and_step(n_micro=1, **opt_kw):
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, decay_steps=100, **opt_kw)
+    step = jax.jit(steps.make_train_step(CFG, opt_cfg, RULES, n_micro))
+    state = init_params(steps.train_state_decl(CFG, opt_cfg),
+                        jax.random.PRNGKey(1), jnp.float32)
+    return state, step
+
+
+def test_loss_decreases_on_learnable_task():
+    dc = DataConfig(batch=8, seq=32, vocab=64, task="copy", seed=3)
+    state, step = _state_and_step()
+    losses = []
+    for i in range(60):
+        batch = jax.tree.map(jnp.asarray, make_batch(dc, i))
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    # streaming (never-repeated) batches: the copy half of the sequence is
+    # the learnable signal; calibrated drop ~0.35 nats over 60 steps
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.25
+
+
+def test_microbatch_equivalence():
+    """n_micro=4 must produce (numerically) the same update as n_micro=1."""
+    dc = DataConfig(batch=8, seq=16, vocab=64, task="lm", seed=0)
+    batch = jax.tree.map(jnp.asarray, make_batch(dc, 0))
+    s1, step1 = _state_and_step(n_micro=1)
+    s4, step4 = _state_and_step(n_micro=4)
+    out1, m1 = step1(s1, batch)
+    out4, m4 = step4(s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(out1["params"]),
+                    jax.tree.leaves(out4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_grad_clipping():
+    g = {"w": jnp.full((10,), 100.0)}
+    p = {"w": jnp.zeros((10,))}
+    mom = {"mu": {"w": jnp.zeros((10,))}, "nu": {"w": jnp.zeros((10,))}}
+    cfg = AdamWConfig(grad_clip=1.0, lr=1.0, warmup_steps=0, decay_steps=1)
+    _, _, metrics = adamw.apply_updates(p, g, mom, jnp.int32(0), cfg)
+    assert float(metrics["grad_norm"]) > 100
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(adamw.lr_at(cfg, jnp.int32(0))) < 1e-3 * 0.2
+    assert float(adamw.lr_at(cfg, jnp.int32(10))) == pytest.approx(1e-3)
+    assert float(adamw.lr_at(cfg, jnp.int32(1000))) <= 1e-3 * 0.11
+
+
+def test_int8_quantization_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                    jnp.float32)
+    q, scale = _quantize_int8(x)
+    err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.51 + 1e-6
+
+
+def test_error_feedback_quantization_converges():
+    """EF compensation: the accumulated residual keeps the mean error near
+    zero over repeated steps (unbiased long-run compression)."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros(256)
+    total_q, total_g = jnp.zeros(256), jnp.zeros(256)
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+        q, residual = ef_quantize(g, residual, bits=4)
+        total_q = total_q + q
+        total_g = total_g + g
+    drift = np.abs(np.asarray(total_q - total_g)).max()
+    # bounded by one quantization step, NOT growing with iterations
+    assert drift < 1.5
+
+
+def test_data_pipeline_resumable():
+    dc = DataConfig(batch=4, seq=16, vocab=64, task="copy", seed=9)
+    from repro.data import SyntheticStream
+    s1 = SyntheticStream(dc)
+    batches = [next(s1) for _ in range(5)]
+    state = s1.state()
+    s2 = SyntheticStream.from_state(dc, {"seed": 9, "step": 3, "task": "copy"})
+    np.testing.assert_array_equal(next(s2)["tokens"], batches[3]["tokens"])
+    # exact replay from saved state
+    s3 = SyntheticStream.from_state(dc, state)
+    nxt = next(s3)
+    s1_next = next(s1)
+    np.testing.assert_array_equal(nxt["tokens"], s1_next["tokens"])
