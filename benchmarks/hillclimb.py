@@ -5,7 +5,13 @@ sharding rules / plan knobs ONLY — model math is identical — and re-run
 the dry-run analysis, producing a before/after roofline comparison that is
 appended to artifacts/hillclimb.json and rendered for EXPERIMENTS.md §Perf.
 
+``--conv <layer>`` hillclimbs the trim_conv2d ``ConvPlan`` knobs
+(tile_h x tile_cout) for one conv layer against the analytical roofline —
+the same plan object the kernel executes, so the winning knobs transfer
+directly to ``trim_conv2d(tile_h=..., tile_cout=...)``.
+
   PYTHONPATH=src python -m benchmarks.hillclimb --exp <name> | --list
+  PYTHONPATH=src python -m benchmarks.hillclimb --conv vgg16:conv2
 """
 
 # must precede any jax import
@@ -15,10 +21,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402
 import json          # noqa: E402
+import sys           # noqa: E402
 import time          # noqa: E402
 
-from repro.configs import registry                  # noqa: E402
-from repro.launch import dryrun                     # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
@@ -157,7 +163,72 @@ _reg(Experiment(
 ))
 
 
+# ---------------------------------------------------------------------------
+# Conv-kernel hillclimb: sweep ConvPlan knobs against the analytical roofline
+# ---------------------------------------------------------------------------
+
+def _conv_layer(name: str):
+    from repro.core import alexnet_layers, mobilenet_layers, vgg16_layers
+    nets = {"vgg16": vgg16_layers, "alexnet": alexnet_layers,
+            "mobilenet": mobilenet_layers}
+    net, _, lname = name.partition(":")
+    if net not in nets:
+        raise SystemExit(f"unknown network {net!r}; have {sorted(nets)}")
+    layers = nets[net]()
+    if not lname:
+        return layers[0]
+    for l in layers:
+        if l.name == lname:
+            return l
+    raise SystemExit(f"unknown layer {lname!r} in {net}; "
+                     f"have {[l.name for l in layers]}")
+
+
+def conv_hillclimb(name: str, mode: str = "3dtrim") -> dict:
+    """Grid-sweep (tile_h, tile_cout) for one layer; score by the modeled
+    step time max(T_comp, T_mem) with a VMEM feasibility constraint."""
+    from repro.core.conv_plan import STRIP_VMEM_BUDGET
+    from repro.core.roofline import conv_plan_roofline
+    from repro.core.tiling import VMEM_BYTES
+    layer = _conv_layer(name)
+    baseline = layer.plan()
+    base_t = conv_plan_roofline(layer.name, baseline, mode).step_time_s
+    s = layer.stride
+    rows, best = [], None
+    h_ticks = sorted({s, 2 * s, 4 * s, 8 * s, 16 * s, 32 * s,
+                      baseline.tile_h, layer.out_size * s})
+    c_ticks = sorted({32, 64, 128, 256, baseline.tile_cout,
+                      layer.out_channels // layer.groups})
+    for th in h_ticks:
+        for tc in c_ticks:
+            if tc > layer.out_channels // layer.groups:
+                continue
+            try:
+                plan = layer.plan(tile_h=th, tile_cout=tc)
+            except ValueError:
+                continue
+            if plan.vmem_resident_bytes > VMEM_BYTES:
+                continue                 # infeasible resident set
+            t = conv_plan_roofline(layer.name, plan, mode).step_time_s
+            row = dict(tile_h=th, tile_cout=tc, step_time_s=t,
+                       vmem_mib=plan.vmem_resident_bytes / 2**20,
+                       hbm_mb=plan.hbm_bytes(mode)["total"] / 1e6,
+                       ai=plan.arithmetic_intensity(mode))
+            rows.append(row)
+            if best is None or t < best["step_time_s"]:
+                best = row
+    result = dict(experiment=f"conv:{name}", mode=mode,
+                  baseline=dict(tile_h=baseline.tile_h,
+                                tile_cout=baseline.tile_cout,
+                                step_time_s=base_t,
+                                budget=STRIP_VMEM_BUDGET),
+                  best=best, n_candidates=len(rows), sweep=rows)
+    return result
+
+
 def run_variant(exp: Experiment) -> dict:
+    from repro.configs import registry
+    from repro.launch import dryrun
     mod = registry.get(exp.arch)
     plan = mod.PLANS[exp.shape]
     for k, v in exp.plan_overrides.items():
@@ -186,17 +257,35 @@ def main():
                     help="run the unmodified cell for comparison")
     ap.add_argument("--arch"), ap.add_argument("--shape")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--conv", default=None, metavar="NET[:LAYER]",
+                    help="hillclimb ConvPlan knobs, e.g. vgg16:conv2")
+    ap.add_argument("--mode", default="3dtrim", choices=["3dtrim", "trim"])
     args = ap.parse_args()
     if args.list:
         for name, e in EXPERIMENTS.items():
             print(f"{name}: {e.arch}/{e.shape}")
         return
     os.makedirs(ART, exist_ok=True)
+    if args.conv:
+        res = conv_hillclimb(args.conv, args.mode)
+        b, base = res["best"], res["baseline"]
+        print(json.dumps(dict(experiment=res["experiment"],
+                              baseline=base, best=b,
+                              speedup=base["step_time_s"]
+                              / max(b["step_time_s"], 1e-12)), indent=1))
+        out_path = os.path.join(ART, "conv_hillclimb.json")
+        results = json.load(open(out_path)) if os.path.exists(out_path) \
+            else []
+        results.append(res)
+        json.dump(results, open(out_path, "w"), indent=1)
+        print("appended to", out_path)
+        return
     out_path = os.path.join(ART, "hillclimb.json")
     results = []
     if os.path.exists(out_path):
         results = json.load(open(out_path))
     if args.baseline:
+        from repro.launch import dryrun
         row = dryrun.run_cell(args.arch, args.shape, multi_pod=False)
         row["experiment"] = f"baseline:{args.arch}/{args.shape}"
     else:

@@ -1,7 +1,9 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-dry-run artifact (artifacts/dryrun_matrix.json).
+dry-run artifact (artifacts/dryrun_matrix.json), plus the analytical conv
+roofline read straight from ``ConvPlan`` (no artifact needed).
 
   PYTHONPATH=src python -m benchmarks.roofline [--artifact path]
+                                               [--section conv|...]
 """
 
 from __future__ import annotations
@@ -10,6 +12,9 @@ import argparse
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def load(path=None):
@@ -88,12 +93,39 @@ def summary(rows) -> str:
     return "\n".join(lines)
 
 
+def conv_table() -> str:
+    """Per-layer conv roofline from the shared ``ConvPlan`` objects — the
+    exact plans the Pallas kernel executes (kernel and table cannot
+    disagree).  Covers VGG-16 plus MobileNet depthwise stages."""
+    from repro.core import mobilenet_layers, vgg16_layers
+    from repro.core.roofline import conv_plan_roofline
+    out = ["| layer | grid | tile_h | AI 3dtrim (fl/B) | AI trim | "
+           "T_comp (us) | T_mem (us) | bound | halo ovh |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for layer in vgg16_layers() + mobilenet_layers():
+        plan = layer.plan()
+        t = conv_plan_roofline(layer.name, plan)
+        ovh = plan.hbm_bytes("trim")["overhead_pct"]
+        out.append(
+            f"| {layer.name} {layer.label()} | {plan.grid} | {plan.tile_h} "
+            f"| {plan.arithmetic_intensity('3dtrim'):.1f} "
+            f"| {plan.arithmetic_intensity('trim'):.1f} "
+            f"| {t.t_compute*1e6:.1f} | {t.t_memory*1e6:.1f} "
+            f"| {t.dominant} | {ovh:.1f}% |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifact", default=None)
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "summary"])
+                    choices=["all", "dryrun", "roofline", "summary", "conv"])
     args = ap.parse_args()
+    if args.section in ("all", "conv"):
+        print("### Conv roofline (ConvPlan analytical)\n" + conv_table()
+              + "\n")
+        if args.section == "conv":
+            return
     rows, path = load(args.artifact)
     print(f"<!-- generated from {os.path.basename(path)} -->\n")
     if args.section in ("all", "summary"):

@@ -12,11 +12,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     roofline fraction), if artifacts/dryrun_matrix.json
                     exists.
 
-Run: PYTHONPATH=src python -m benchmarks.run
+  * plan_*        — ConvPlan analytical traffic / arithmetic intensity for
+                    representative VGG-16 and MobileNet (depthwise) layers
+                    (derived = flop/byte | modeled bound).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--smoke]
+``--smoke`` runs a fast CI subset (analytical models + one tiny kernel).
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -78,15 +84,45 @@ def bench_simulator(emit):
              f"{stats.ops_per_memory_access:.2f}ops/access")
 
 
-def bench_kernels(emit):
+def bench_conv_plan(emit):
+    """ConvPlan analytical traffic — the same plan objects the kernel
+    executes; keeps the benchmark, roofline and kernel in agreement."""
+    from repro.core import mobilenet_layers, vgg16_layers
+    from repro.core.roofline import conv_plan_roofline
+    for layer in [vgg16_layers()[1], vgg16_layers()[12],
+                  mobilenet_layers()[0], mobilenet_layers()[1]]:
+        t0 = time.perf_counter()
+        plan = layer.plan()
+        terms = conv_plan_roofline(layer.name, plan)
+        us = (time.perf_counter() - t0) * 1e6
+        label = layer.label().replace(",", "x")   # keep CSV comma-free
+        emit(f"plan_{layer.name}_{label}", us,
+             f"{plan.arithmetic_intensity():.1f}flop/B|{terms.dominant}")
+
+
+def bench_kernels(emit, smoke: bool = False):
     import jax.numpy as jnp
     from repro.kernels import ops, ref
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.standard_normal((1, 28, 28, 16)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 16, 32)) * .2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
     us_k = _time(lambda: ops.conv2d(x, w, impl="pallas").block_until_ready())
     us_r = _time(lambda: ops.conv2d(x, w, impl="ref").block_until_ready())
     emit("kernel_conv2d_pallas_interp", us_k, f"oracle={us_r:.0f}us")
+
+    us_f = _time(lambda: ops.conv2d(
+        x, w, bias=b, activation="relu", impl="pallas").block_until_ready())
+    emit("kernel_conv2d_fused_epilogue", us_f, f"unfused={us_k:.0f}us")
+
+    wd = jnp.asarray(rng.standard_normal((3, 3, 1, 16)) * .2, jnp.float32)
+    us_d = _time(lambda: ops.depthwise_conv2d(
+        x, wd, impl="pallas").block_until_ready())
+    us_dr = _time(lambda: ops.depthwise_conv2d(
+        x, wd, impl="ref").block_until_ready())
+    emit("kernel_depthwise2d_pallas_interp", us_d, f"oracle={us_dr:.0f}us")
+    if smoke:
+        return
 
     xx = jnp.asarray(rng.standard_normal((2, 256, 64)), jnp.float32)
     ww = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
@@ -123,6 +159,10 @@ def bench_roofline(emit):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: analytical models + tiny kernels")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
 
     def emit(name, us, derived):
@@ -130,6 +170,10 @@ def main() -> None:
 
     bench_fig1(emit)
     bench_fig6(emit)
+    bench_conv_plan(emit)
+    if args.smoke:
+        bench_kernels(emit, smoke=True)
+        return
     bench_table1(emit)
     bench_simulator(emit)
     bench_kernels(emit)

@@ -1,6 +1,10 @@
 """The paper's own workload: VGG-16-style CNN inference running through
-the trim_conv2d Pallas kernel, with the per-layer OPs/Access accounting of
-Fig. 6 printed alongside.
+the trim_conv2d Pallas kernel — bias + ReLU fused into the kernel epilogue,
+a MobileNet-style depthwise-separable block on the grouped-conv path, and
+the per-layer OPs/Access accounting of Fig. 6 printed alongside.
+
+Every traffic/arithmetic-intensity number comes from the same ``ConvPlan``
+objects the kernels execute.
 
   PYTHONPATH=src python examples/cnn_inference.py
 """
@@ -8,26 +12,35 @@ Fig. 6 printed alongside.
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import compare_layer, vgg16_layers
-from repro.kernels import ops
-from repro.kernels.trim_conv2d import hbm_traffic_model
+from repro.core import compare_layer, mobilenet_layers, vgg16_layers
+from repro.core.roofline import conv_plan_roofline
+from repro.models import layers
 
-rng = np.random.default_rng(0)
+rng = jax.random.PRNGKey(0)
 
 # a reduced VGG-16 head (channel counts /8, 32x32 input) that runs in
 # seconds on CPU interpret mode; the access accounting uses full configs
-x = jnp.asarray(rng.standard_normal((1, 32, 32, 3)), jnp.float32)
+x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 32, 32, 3)),
+                jnp.float32)
 channels = [8, 8, 16, 16, 32]
+from repro.models.base import init_params
 for i, c in enumerate(channels):
-    w = jnp.asarray(rng.standard_normal((3, 3, x.shape[-1], c)) * 0.2,
-                    jnp.float32)
-    x = jnp.maximum(ops.conv2d(x, w, padding="same", impl="pallas"), 0.0)
+    p = init_params(layers.conv2d_params(3, x.shape[-1], c),
+                    jax.random.fold_in(rng, i))
+    x = layers.conv2d_apply(p, x, activation="relu")   # fused bias+ReLU
     if i % 2 == 1:
         x = x[:, ::2, ::2, :]          # poor man's maxpool (stride slice)
 print("reduced VGG head output:", x.shape, "mean", float(x.mean()))
+
+# depthwise-separable block (MobileNet scenario, grouped kernel path)
+p = init_params(layers.depthwise_separable_params(3, x.shape[-1], 64),
+                jax.random.fold_in(rng, 99))
+y = layers.depthwise_separable_apply(p, x, stride=2)
+print("depthwise-separable block output:", y.shape, "mean", float(y.mean()))
 
 print("\nFull VGG-16 per-layer OPs/Access/Slice (Fig. 6a):")
 for layer in vgg16_layers():
@@ -35,8 +48,16 @@ for layer in vgg16_layers():
     print(f"  {row['layer']:>18s}: 3D-TrIM {row['3d-trim']:.2f} "
           f"vs TrIM {row['trim']:.2f}  ({row['improvement']:.2f}x)")
 
-print("\nTPU-side HBM traffic model (kernel strips, 224x224x64 -> 64):")
-for mode in ("3dtrim", "trim"):
-    t = hbm_traffic_model(1, 224, 224, 64, 64, 3, tile_h=8, mode=mode)
-    print(f"  {mode:7s}: input {t['input']/1e6:.1f} MB "
-          f"(halo overhead {t['overhead_pct']:.1f}%)")
+print("\nTPU-side ConvPlan traffic + roofline (same plan the kernel runs):")
+for layer in [vgg16_layers()[1]] + mobilenet_layers()[:2]:
+    plan = layer.plan()
+    for mode in ("3dtrim", "trim"):
+        t = plan.hbm_bytes(mode)
+        print(f"  {layer.name:>6s} [{mode:7s}]: input {t['input']/1e6:7.1f} MB "
+              f"(halo overhead {t['overhead_pct']:4.1f}%)  "
+              f"AI {plan.arithmetic_intensity(mode):7.1f} flop/B")
+    terms = conv_plan_roofline(layer.name, plan)
+    print(f"  {layer.name:>6s} roofline: T_comp {terms.t_compute*1e6:.0f} us "
+          f"T_mem {terms.t_memory*1e6:.0f} us -> {terms.dominant}-bound, "
+          f"grid {plan.grid}, tile_h {plan.tile_h}, "
+          f"VMEM {plan.vmem_resident_bytes/2**20:.1f} MiB")

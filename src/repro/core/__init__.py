@@ -1,9 +1,14 @@
-"""3D-TrIM core: dataflow simulator, analytical models, tiling, roofline."""
+"""3D-TrIM core: conv planning, dataflow simulator, analytical models,
+tiling, roofline."""
 
+from repro.core.conv_plan import (  # noqa: F401
+    ConvPlan, Conv1dPlan, slice_reads_per_channel,
+)
 from repro.core.model import (  # noqa: F401
     ConvLayer, HWConfig, TRIM, TRIM_3D,
     ifmap_reads_per_channel, ifmap_overhead_pct, fig1_curve,
     layer_accesses, compare_layer, fig6, vgg16_layers, alexnet_layers,
+    mobilenet_layers,
 )
 from repro.core.dataflow import (  # noqa: F401
     TrimSliceSim, SliceStats, core_conv, reference_conv2d_valid,

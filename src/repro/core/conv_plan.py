@@ -1,0 +1,414 @@
+"""The single source of truth for TrIM convolution planning.
+
+Every consumer of the 3D-TrIM dataflow used to re-derive the same tile
+math independently: the Pallas kernel computed strip geometry inline, the
+kernel module carried its own ``hbm_traffic_model``, and ``core/model.py``
+had a third analytical model.  They could silently disagree, which made
+perf hillclimbing against the analytical traffic numbers untrustworthy.
+
+This module owns all of it (DESIGN.md §3):
+
+* :class:`ConvPlan` — geometry plan for one 2D convolution: strip tiling,
+  shadow-register carry sizes, Pallas grid shape, padded HBM layouts, and
+  the analytical HBM byte counts in ``mode="3dtrim"`` (carry resident in
+  VMEM, zero halo traffic) vs ``mode="trim"`` (K-1 halo rows re-fetched
+  per strip — the overhead the paper's shadow registers eliminate).
+  ``kernels/trim_conv2d.py`` builds its ``pallas_call`` from the plan;
+  ``core/roofline.py`` and ``benchmarks/*`` read traffic and arithmetic
+  intensity from the same object.
+
+* :class:`Conv1dPlan` — the 1D image of the same plan, consumed by
+  ``kernels/trim_conv1d.py``.
+
+* :func:`slice_reads_per_channel` — the paper-level per-slice external
+  read count (Fig. 1), consumed by ``core/model.py`` (Fig. 6 accounting)
+  and validated cycle-by-cycle by ``core/dataflow.TrimSliceSim``.
+
+Grouped / depthwise convolution (``groups`` > 1, the MobileNet scenario
+of the paper's OPs-per-access comparison) is a first-class plan axis: the
+weight tensor is ``(K, K, Cin/groups, Cout)`` and every derived quantity
+(carry width, weight blocks, MACs, traffic) accounts for the reduced
+per-group fan-in.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# Default budget for the auto-chosen input strip: half of a ~16 MiB VMEM
+# core, leaving headroom for the weight tile, accumulator and pipelining.
+STRIP_VMEM_BUDGET = 8 << 20
+
+
+# ---------------------------------------------------------------------------
+# Paper-level slice model (Fig. 1) — consumed by core/model and core/dataflow
+# ---------------------------------------------------------------------------
+
+def slice_reads_per_channel(height: int, width: int, kernel: int,
+                            stride: int = 1, *, shadow: bool) -> int:
+    """External reads of one ifmap channel for one pass of a TrIM slice.
+
+    The sliding-window band advances by ``stride`` rows per output row.
+    With shadow registers (3D-TrIM) every real activation is read exactly
+    once.  Without them (TrIM), every band advance re-reads the last
+    ``K-1`` activations of each of the ``K - stride`` re-used rows.
+    """
+    ideal = height * width
+    if shadow:
+        return ideal
+    out_rows = (height - kernel) // stride + 1
+    band_advances = max(out_rows - 1, 0)
+    reused_rows = max(kernel - stride, 0)
+    rereads_per_advance = reused_rows * (kernel - 1)
+    return ideal + band_advances * rereads_per_advance
+
+
+# ---------------------------------------------------------------------------
+# 2D plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvPlan:
+    """Geometry + traffic plan for one strided (grouped) 2D convolution.
+
+    Shapes follow the kernel convention: input ``(N, H, W, Cin)``, weights
+    ``(KH, KW, Cin/groups, Cout)``, symmetric zero padding ``pad``.  All
+    derived quantities — strip geometry, carry size, grid, padded layouts,
+    HBM bytes — are pure functions of these fields, so a plan printed by a
+    benchmark is bit-identical to the one the kernel executes.
+    """
+
+    n: int
+    h: int
+    w: int
+    cin: int
+    cout: int
+    kh: int
+    kw: int
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    dtype_bytes: int = 4
+    tile_h: int = 8            # strip height in *input* rows
+    tile_cout: int = 128       # C_out tile per grid step (per group)
+    vmem_budget: int = STRIP_VMEM_BUDGET
+
+    def __post_init__(self):
+        if self.cin % self.groups or self.cout % self.groups:
+            raise ValueError(
+                f"groups={self.groups} must divide cin={self.cin} and "
+                f"cout={self.cout}")
+        if self.tile_h % self.stride:
+            raise ValueError(
+                f"tile_h={self.tile_h} must be a multiple of the stride "
+                f"{self.stride}")
+        if self.h_out < 1 or self.w_out < 1:
+            raise ValueError("empty output: input smaller than kernel")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+              groups: int = 1, dtype_bytes: int = 4,
+              tile_h: int | None = None, tile_cout: int | None = None,
+              vmem_budget: int = STRIP_VMEM_BUDGET) -> "ConvPlan":
+        """Plan from array shapes, auto-choosing tiles when not given.
+
+        ``tile_cout`` defaults to an MXU-friendly 128 when it divides the
+        per-group C_out, else the whole per-group C_out.  ``tile_h`` is the
+        largest stride multiple whose resident strip fits ``vmem_budget``.
+        """
+        n, h, w, cin = x_shape
+        kh, kw, cin_pg, cout = w_shape
+        if cin_pg * groups != cin:
+            raise ValueError(
+                f"weights expect cin/groups={cin_pg} with groups={groups}, "
+                f"input has cin={cin}")
+        s = stride
+        cout_pg = cout // groups
+        if tile_cout is None:
+            tile_cout = min(cout_pg, 128 if cout_pg % 128 == 0 else cout_pg)
+        if tile_h is None:
+            h_out = (h + 2 * pad - kh) // s + 1
+            wp_bytes = (w + 2 * pad + kh) * cin_pg * dtype_bytes
+            tile_h = max(s, min(h_out * s, vmem_budget // max(wp_bytes, 1)))
+            tile_h -= tile_h % s
+            tile_h = max(tile_h, s)
+        return cls(n=n, h=h, w=w, cin=cin, cout=cout, kh=kh, kw=kw,
+                   stride=s, pad=pad, groups=groups,
+                   dtype_bytes=dtype_bytes, tile_h=tile_h,
+                   tile_cout=tile_cout, vmem_budget=vmem_budget)
+
+    @classmethod
+    def from_layer(cls, layer, *, n: int = 1, dtype_bytes: int = 4,
+                   tile_h: int | None = None, tile_cout: int | None = None,
+                   vmem_budget: int = STRIP_VMEM_BUDGET) -> "ConvPlan":
+        """Plan from a ``core.model.ConvLayer`` description (duck-typed)."""
+        groups = getattr(layer, "groups", 1)
+        return cls.build(
+            (n, layer.ifmap, layer.ifmap, layer.in_channels),
+            (layer.kernel, layer.kernel, layer.in_channels // groups,
+             layer.out_channels),
+            stride=layer.stride, pad=layer.padding, groups=groups,
+            dtype_bytes=dtype_bytes, tile_h=tile_h, tile_cout=tile_cout,
+            vmem_budget=vmem_budget)
+
+    # -- problem geometry --------------------------------------------------
+
+    @property
+    def cin_per_group(self) -> int:
+        return self.cin // self.groups
+
+    @property
+    def cout_per_group(self) -> int:
+        return self.cout // self.groups
+
+    @property
+    def h_out(self) -> int:
+        return (self.h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w + 2 * self.pad - self.kw) // self.stride + 1
+
+    # -- strip geometry (DESIGN.md §2) -------------------------------------
+
+    @property
+    def th_out(self) -> int:
+        """Output rows produced per strip."""
+        return self.tile_h // self.stride
+
+    @property
+    def delta(self) -> int:
+        """Top rows of the padded output that are sliced off."""
+        return (self.kh - 1) // self.stride
+
+    @property
+    def row_offset(self) -> int:
+        """Static in-window row offset ``(KH-1) mod stride``."""
+        return (self.kh - 1) % self.stride
+
+    @property
+    def g_tiles(self) -> int:
+        """Number of input strips (grid steps along H)."""
+        return math.ceil((self.h_out + self.delta) / self.th_out)
+
+    @property
+    def rows_padded(self) -> int:
+        """Input rows after bottom padding to a whole number of strips."""
+        return self.g_tiles * self.tile_h
+
+    @property
+    def pad_bottom(self) -> int:
+        """Bottom zero padding (negative: the input is cropped)."""
+        return self.rows_padded - self.h - self.pad
+
+    @property
+    def wp(self) -> int:
+        """Padded input width."""
+        return self.w + 2 * self.pad
+
+    @property
+    def co_tiles(self) -> int:
+        """C_out tiles per group (grid steps along C_out)."""
+        return math.ceil(self.cout_per_group / self.tile_cout)
+
+    @property
+    def cout_padded_per_group(self) -> int:
+        return self.co_tiles * self.tile_cout
+
+    # -- pallas_call layout ------------------------------------------------
+
+    @property
+    def grid(self) -> tuple[int, int, int, int]:
+        """(N, groups, strips, C_out tiles) — C_out innermost so a strip is
+        fetched once and reused by every C_out tile (shared-IRB image)."""
+        return (self.n, self.groups, self.g_tiles, self.co_tiles)
+
+    @property
+    def padded_input_shape(self) -> tuple[int, int, int, int]:
+        return (self.n, self.rows_padded, self.wp, self.cin)
+
+    @property
+    def padded_weight_shape(self) -> tuple[int, int, int, int]:
+        return (self.kh, self.kw, self.cin_per_group,
+                self.groups * self.cout_padded_per_group)
+
+    @property
+    def padded_output_shape(self) -> tuple[int, int, int, int]:
+        return (self.n, self.g_tiles * self.th_out, self.w_out,
+                self.groups * self.cout_padded_per_group)
+
+    @property
+    def in_block(self) -> tuple[int, int, int, int]:
+        return (1, self.tile_h, self.wp, self.cin_per_group)
+
+    @property
+    def w_block(self) -> tuple[int, int, int, int]:
+        return (self.kh, self.kw, self.cin_per_group, self.tile_cout)
+
+    @property
+    def out_block(self) -> tuple[int, int, int, int]:
+        return (1, self.th_out, self.w_out, self.tile_cout)
+
+    @property
+    def carry_shape(self) -> tuple[int, int, int]:
+        """Shadow-register scratch: the K-1 boundary rows carried across
+        strips (per group)."""
+        return (max(self.kh - 1, 1), self.wp, self.cin_per_group)
+
+    @property
+    def vmem_resident_bytes(self) -> int:
+        """Resident set of one grid step (strip + carry + weights + acc)."""
+        db = self.dtype_bytes
+        strip = self.tile_h * self.wp * self.cin_per_group * db
+        carry = self.carry_shape[0] * self.wp * self.cin_per_group * db
+        wtile = self.kh * self.kw * self.cin_per_group * self.tile_cout * db
+        acc = self.th_out * self.w_out * self.tile_cout * 4   # fp32
+        return strip + carry + wtile + acc
+
+    # -- arithmetic --------------------------------------------------------
+
+    @property
+    def macs(self) -> int:
+        return (self.n * self.h_out * self.w_out * self.cout
+                * self.kh * self.kw * self.cin_per_group)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    # -- analytical HBM traffic -------------------------------------------
+
+    def halo_rows(self, mode: str = "3dtrim") -> int:
+        """Input rows re-fetched from HBM across one (N, group) sweep.
+
+        ``"3dtrim"``: the K-1 boundary rows live in the VMEM carry scratch
+        — zero halo.  ``"trim"``: every strip after the first re-fetches
+        its K-1 predecessor rows, the overhead of Fig. 1 at strip level.
+        """
+        if mode == "3dtrim":
+            return 0
+        if mode == "trim":
+            return (self.g_tiles - 1) * (self.kh - 1)
+        raise ValueError(f"unknown mode {mode!r}")
+
+    def hbm_bytes(self, mode: str = "3dtrim") -> dict:
+        """Analytical HBM bytes moved by the kernel's schedule.
+
+        ``input`` in ``"3dtrim"`` mode equals exactly the padded-input
+        array size (each strip fetched once, shared by all C_out tiles);
+        ``weights`` are re-streamed once per strip; ``output`` counts the
+        useful (un-padded) result.
+        """
+        db = self.dtype_bytes
+        halo = self.halo_rows(mode)
+        in_bytes = self.n * (self.rows_padded + halo) * self.wp \
+            * self.cin * db
+        w_bytes = (self.kh * self.kw * self.cin_per_group * self.cout
+                   * db * self.g_tiles)
+        out_bytes = self.n * self.h_out * self.w_out * self.cout * db
+        return dict(input=in_bytes, weights=w_bytes, output=out_bytes,
+                    total=in_bytes + w_bytes + out_bytes,
+                    overhead_pct=100.0 * halo / max(self.rows_padded, 1))
+
+    def arithmetic_intensity(self, mode: str = "3dtrim") -> float:
+        """FLOPs per HBM byte — the roofline x-coordinate."""
+        return self.flops / max(self.hbm_bytes(mode)["total"], 1)
+
+    def as_dict(self) -> dict:
+        t = self.hbm_bytes("3dtrim")
+        return dict(grid=self.grid, tile_h=self.tile_h,
+                    tile_cout=self.tile_cout, th_out=self.th_out,
+                    g_tiles=self.g_tiles, co_tiles=self.co_tiles,
+                    carry_shape=self.carry_shape,
+                    vmem_resident_bytes=self.vmem_resident_bytes,
+                    flops=self.flops, hbm_total=t["total"],
+                    arithmetic_intensity=self.arithmetic_intensity())
+
+
+# ---------------------------------------------------------------------------
+# 1D plan (depthwise causal conv — Mamba / RG-LRU temporal mixing)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Conv1dPlan:
+    """Plan for the depthwise causal conv1d kernel: chunks of ``tile_l``
+    timesteps with a ``K-1`` carry, channel axis tiled for the VPU lanes."""
+
+    b: int
+    length: int
+    d: int
+    k: int
+    dtype_bytes: int = 4
+    tile_l: int = 512
+    tile_d: int = 1024
+
+    @classmethod
+    def build(cls, x_shape, w_shape, *, dtype_bytes: int = 4,
+              tile_l: int | None = None,
+              tile_d: int | None = None) -> "Conv1dPlan":
+        b, length, d = x_shape
+        k, _ = w_shape
+        if tile_l is None:
+            tile_l = min(length, 512)
+        if tile_d is None:
+            tile_d = min(d, 1024 if d % 128 == 0 else d)
+        return cls(b=b, length=length, d=d, k=k, dtype_bytes=dtype_bytes,
+                   tile_l=tile_l, tile_d=tile_d)
+
+    @property
+    def g_tiles(self) -> int:
+        return math.ceil(self.length / self.tile_l)
+
+    @property
+    def d_tiles(self) -> int:
+        return math.ceil(self.d / self.tile_d)
+
+    @property
+    def length_padded(self) -> int:
+        return self.g_tiles * self.tile_l
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """(B, channel tiles, chunks) — chunks innermost so the carry is
+        valid within one (batch, channel) sweep."""
+        return (self.b, self.d_tiles, self.g_tiles)
+
+    @property
+    def padded_input_shape(self) -> tuple[int, int, int]:
+        return (self.b, self.length_padded, self.d)
+
+    @property
+    def in_block(self) -> tuple[int, int, int]:
+        return (1, self.tile_l, self.tile_d)
+
+    @property
+    def w_block(self) -> tuple[int, int]:
+        return (self.k, self.tile_d)
+
+    @property
+    def carry_shape(self) -> tuple[int, int]:
+        return (max(self.k - 1, 1), self.tile_d)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.b * self.length * self.d * self.k
+
+    def hbm_bytes(self, mode: str = "3dtrim") -> dict:
+        db = self.dtype_bytes
+        if mode == "3dtrim":
+            halo = 0
+        elif mode == "trim":
+            halo = self.b * self.d * (self.g_tiles - 1) * (self.k - 1)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        in_bytes = (self.b * self.length_padded * self.d + halo) * db
+        w_bytes = self.k * self.d * db * self.b * self.g_tiles
+        out_bytes = self.b * self.length * self.d * db
+        return dict(input=in_bytes, weights=w_bytes, output=out_bytes,
+                    total=in_bytes + w_bytes + out_bytes)
+
+    def arithmetic_intensity(self, mode: str = "3dtrim") -> float:
+        return self.flops / max(self.hbm_bytes(mode)["total"], 1)

@@ -23,7 +23,7 @@ The IRB holds two structures (Fig. 4):
     overhead (Fig. 1).
 
 The simulator counts every external memory read and is validated against
-both the analytical model (`core.model.ifmap_reads_per_channel`) and a
+both the analytical model (`core.conv_plan.slice_reads_per_channel`) and a
 direct convolution oracle.
 
 Functional timing note: real hardware staggers the K columns in time
@@ -40,7 +40,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.model import ifmap_reads_per_channel
+from repro.core.conv_plan import slice_reads_per_channel
 
 
 @dataclass
@@ -179,8 +179,9 @@ class TrimSliceSim:
         return output, stats
 
     def expected_memory_reads(self, h: int, w: int) -> int:
-        """Analytical prediction for the reads counted by :meth:`run`."""
-        return ifmap_reads_per_channel(
+        """Analytical prediction for the reads counted by :meth:`run` —
+        read straight from the shared planning model (conv_plan)."""
+        return slice_reads_per_channel(
             h, w, self.k, 1, shadow=(self.mode == "3dtrim"))
 
 

@@ -29,6 +29,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
+from repro.core.conv_plan import ConvPlan, slice_reads_per_channel
+
 
 # ---------------------------------------------------------------------------
 # Layer / hardware descriptions
@@ -45,6 +47,7 @@ class ConvLayer:
     kernel: int         # K
     stride: int = 1     # S
     padding: int = 0    # P (symmetric zero padding; zeros are never *read*)
+    groups: int = 1     # feature groups (== C for depthwise)
 
     @property
     def out_size(self) -> int:
@@ -52,16 +55,25 @@ class ConvLayer:
 
     @property
     def macs(self) -> int:
-        return (self.out_size ** 2) * self.in_channels * self.out_channels \
-            * (self.kernel ** 2)
+        return (self.out_size ** 2) * (self.in_channels // self.groups) \
+            * self.out_channels * (self.kernel ** 2)
 
     @property
     def ops(self) -> int:
         return 2 * self.macs
 
     def label(self) -> str:
+        g = f",g{self.groups}" if self.groups > 1 else ""
         return (f"({self.ifmap},{self.in_channels},"
-                f"{self.out_channels},{self.kernel})")
+                f"{self.out_channels},{self.kernel}{g})")
+
+    def plan(self, *, n: int = 1, dtype_bytes: int = 4,
+             tile_h: int | None = None,
+             tile_cout: int | None = None) -> ConvPlan:
+        """The TPU-kernel ``ConvPlan`` for this layer — same object the
+        Pallas kernel executes and the roofline/benchmarks read."""
+        return ConvPlan.from_layer(self, n=n, dtype_bytes=dtype_bytes,
+                                   tile_h=tile_h, tile_cout=tile_cout)
 
 
 @dataclass(frozen=True)
@@ -109,19 +121,11 @@ def ifmap_reads_per_channel(height: int, width: int, kernel: int,
                             stride: int = 1, *, shadow: bool) -> int:
     """External reads of one ifmap channel for one pass of the array.
 
-    The sliding-window band advances by ``stride`` rows per output row.
-    With shadow registers every real activation is read exactly once.
-    Without them (TrIM), every band advance re-reads the last ``K-1``
-    activations of each of the ``K - stride`` re-used rows.
+    Alias of ``core.conv_plan.slice_reads_per_channel`` — the single place
+    this math lives; kept under its historical name for the Fig. 1/6 API.
     """
-    ideal = height * width
-    if shadow:
-        return ideal
-    out_rows = (height - kernel) // stride + 1
-    band_advances = max(out_rows - 1, 0)
-    reused_rows = max(kernel - stride, 0)
-    rereads_per_advance = reused_rows * (kernel - 1)
-    return ideal + band_advances * rereads_per_advance
+    return slice_reads_per_channel(height, width, kernel, stride,
+                                   shadow=shadow)
 
 
 def ifmap_overhead_pct(size: int, kernel: int = 3, stride: int = 1) -> float:
@@ -177,9 +181,12 @@ def layer_accesses(layer: ConvLayer, hw: HWConfig) -> LayerAccesses:
     tiles = num_subkernels(k, hw.native_k)
     sub_k = k if tiles == 1 else hw.native_k
 
-    # Filter passes: every pass over a new group of filters re-streams the
-    # whole ifmap (psums for only ``filter_parallel`` ofmaps fit on chip).
-    filter_passes = math.ceil(layer.out_channels / hw.filter_parallel)
+    # Filter passes: every pass over a new batch of filters re-streams the
+    # ifmap channels it consumes (psums for only ``filter_parallel`` ofmaps
+    # fit on chip).  With feature groups, a filter only consumes its own
+    # group's C/groups channels.
+    filter_passes = math.ceil(layer.out_channels // layer.groups
+                              / hw.filter_parallel)
 
     # Per-channel reads for one pass of one (sub-)kernel.
     rpc = ifmap_reads_per_channel(layer.ifmap, layer.ifmap, sub_k, s,
@@ -191,7 +198,8 @@ def layer_accesses(layer: ConvLayer, hw: HWConfig) -> LayerAccesses:
     # Weights are loaded once per (filter, channel, tap).  Tiled kernels are
     # zero-padded up to tiles * native_k^2 taps.
     taps = k * k if tiles == 1 else tiles * hw.native_k ** 2
-    weight_reads = layer.out_channels * layer.in_channels * taps
+    weight_reads = layer.out_channels * (layer.in_channels // layer.groups) \
+        * taps
 
     return LayerAccesses(layer=layer, hw=hw, ifmap_reads=ifmap_reads,
                          weight_reads=weight_reads)
@@ -239,8 +247,23 @@ def alexnet_layers() -> list[ConvLayer]:
     ]
 
 
+def mobilenet_layers() -> list[ConvLayer]:
+    """Representative MobileNetV1 depthwise-separable stages: each stage is
+    a depthwise 3x3 (groups == C) followed by a pointwise 1x1 — the
+    low-reuse workload the paper's OPs/Access comparison targets."""
+    layers: list[ConvLayer] = []
+    for i, (i_sz, c, f, s) in enumerate([
+            (112, 32, 64, 1), (112, 64, 128, 2),
+            (56, 128, 256, 2), (28, 256, 512, 2)]):
+        layers.append(ConvLayer(f"dw{i+1}", i_sz, c, c, kernel=3, stride=s,
+                                padding=1, groups=c))
+        layers.append(ConvLayer(f"pw{i+1}", i_sz // s, c, f, kernel=1))
+    return layers
+
+
 def fig6(network: str = "vgg16") -> list[dict]:
-    layers = vgg16_layers() if network == "vgg16" else alexnet_layers()
+    layers = {"vgg16": vgg16_layers, "alexnet": alexnet_layers,
+              "mobilenet": mobilenet_layers}[network]()
     return [compare_layer(l) for l in layers]
 
 

@@ -208,6 +208,23 @@ def analyze_compiled(cell: str, compiled, n_devices: int,
     )
 
 
+def conv_plan_roofline(cell: str, plan, mode: str = "3dtrim"
+                       ) -> RooflineTerms:
+    """Roofline terms for one conv layer, read straight from its
+    ``ConvPlan`` — the same object the Pallas kernel executes, so the
+    hillclimb's T_mem uses exactly the kernel's strip/carry traffic."""
+    traffic = plan.hbm_bytes(mode)
+    return RooflineTerms(
+        cell=cell,
+        flops_per_dev=float(plan.flops),
+        hbm_bytes_per_dev=float(traffic["total"]),
+        coll_bytes_per_dev=0.0,
+        coll_by_kind={},
+        peak_memory_bytes=float(plan.vmem_resident_bytes),
+        model_flops_per_dev=float(plan.flops),
+    )
+
+
 def markdown_table(rows: list[RooflineTerms]) -> str:
     hdr = ("| cell | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | "
            "useful/HLO | roofline frac | peak GiB/dev |\n"

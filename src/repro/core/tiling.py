@@ -8,11 +8,10 @@ Two distinct concerns live here:
   the partial results.  We use the same decomposition arithmetically in
   ``kernels/ops.py`` for K > 8 (MXU-unfriendly kernels).
 
-* ``plan_conv_tiles`` — the TPU analogue of sizing the IRB: choose VMEM
-  block shapes (spatial strip x C_in tile x C_out tile) so that the
-  resident set (ifmap strip + weight tile + psum block) fits the ~16 MiB
-  VMEM of a TPU core while keeping the MXU matmul dimensions aligned to
-  multiples of the 128-lane hardware tiling.
+* ``plan_conv_tiles`` — compatibility facade over
+  ``core.conv_plan.ConvPlan``, which is the single owner of strip/tile/
+  traffic math.  It sizes the resident set (ifmap strip + carry + weight
+  tile + psum block) against the VMEM of a TPU core.
 """
 
 from __future__ import annotations
@@ -42,14 +41,6 @@ def subkernel_decomposition(k: int, native_k: int = 3
     return subs
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _round_down_pow2(x: int) -> int:
-    return 1 << max(x.bit_length() - 1, 0)
-
-
 @dataclass(frozen=True)
 class ConvTilePlan:
     """Block shapes for the trim_conv2d Pallas kernel."""
@@ -71,31 +62,28 @@ def plan_conv_tiles(h: int, w: int, cin: int, cout: int, k: int,
                     vmem_budget: int = VMEM_BYTES) -> ConvTilePlan:
     """Choose (TH, TCin, TCout) so the resident set fits VMEM.
 
-    Resident set per grid step (the TPU image of the IRB contract):
-      ifmap strip   (TH + K - 1, W + K - 1, TCin)   — fetched once, reused
-                     by every C_out tile (index map ignores the C_out axis)
-      weight tile   (K, K, TCin, TCout)             — stationary
-      psum block    (TH, W, TCout) fp32             — adder-tree analogue
+    Facade over ``ConvPlan.build`` for the strip/C_out geometry; when the
+    full channel slice still overflows the budget (huge C_in/C_out), the
+    C_in then C_out tiles are halved until the resident set fits — the
+    sizing contract callers rely on.
     """
-    halo = k - 1
-    tile_cin = min(_round_up(cin, MXU_ALIGN), 256) if cin >= MXU_ALIGN \
-        else _round_up(cin, 8)
-    tile_cout = min(_round_up(cout, MXU_ALIGN), 256) if cout >= MXU_ALIGN \
-        else _round_up(cout, 8)
+    from repro.core.conv_plan import ConvPlan
+    plan = ConvPlan.build((1, h, w, cin), (k, k, cin, cout),
+                          dtype_bytes=dtype_bytes,
+                          vmem_budget=vmem_budget // 2)
+    tile_cin, tile_cout = cin, plan.tile_cout
 
-    def resident(th: int, tci: int, tco: int) -> int:
-        strip = (th + halo) * (w + halo) * tci * dtype_bytes
+    def resident(tci: int, tco: int) -> int:
+        strip = plan.tile_h * plan.wp * tci * dtype_bytes
+        carry = plan.carry_shape[0] * plan.wp * tci * dtype_bytes
         wtile = k * k * tci * tco * dtype_bytes
-        psum = th * w * tco * 4
-        return strip + wtile + psum
+        acc = plan.th_out * plan.w_out * tco * 4        # fp32 psums
+        return strip + carry + wtile + acc
 
-    tile_h = h
-    while tile_h > 1 and resident(tile_h, tile_cin, tile_cout) > vmem_budget:
-        tile_h = _round_down_pow2(tile_h - 1)
-    while (resident(tile_h, tile_cin, tile_cout) > vmem_budget
-           and tile_cin > 8):
+    while resident(tile_cin, tile_cout) > vmem_budget and tile_cin > 8:
         tile_cin //= 2
-    return ConvTilePlan(tile_h=tile_h, tile_cin=min(tile_cin, cin) if cin >= 8
-                        else tile_cin,
-                        tile_cout=tile_cout, halo=halo,
-                        vmem_bytes=resident(tile_h, tile_cin, tile_cout))
+    while resident(tile_cin, tile_cout) > vmem_budget and tile_cout > 8:
+        tile_cout //= 2
+    return ConvTilePlan(tile_h=plan.tile_h, tile_cin=tile_cin,
+                        tile_cout=tile_cout, halo=k - 1,
+                        vmem_bytes=resident(tile_cin, tile_cout))

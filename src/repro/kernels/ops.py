@@ -46,18 +46,30 @@ def _same_pads(size: int, k: int, s: int) -> tuple[int, int]:
 
 
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
-           padding: str = "same", impl: str = "pallas") -> jax.Array:
-    """x: (N, H, W, Cin); w: (K, K, Cin, Cout)."""
+           padding: str = "same", impl: str = "pallas",
+           feature_group_count: int = 1, bias: jax.Array | None = None,
+           activation: str | None = None) -> jax.Array:
+    """(Grouped) 2D convolution with optional fused bias + activation.
+
+    x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout); bias: (Cout,) or None;
+    ``feature_group_count=Cin`` gives depthwise convolution.  The Pallas
+    path fuses the epilogue into the kernel's accumulator store.
+    """
     if impl == "ref":
-        return ref.conv2d(x, w, stride=stride, padding=padding)
+        return ref.conv2d(x, w, stride=stride, padding=padding,
+                          feature_group_count=feature_group_count,
+                          bias=bias, activation=activation)
     k = w.shape[0]
     if padding == "same":
         ph, pw = _same_pads(x.shape[1], k, stride), \
             _same_pads(x.shape[2], k, stride)
         x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
     if k <= MAX_NATIVE_K:
-        return trim_conv2d(x, w, stride=stride, pad=0)
+        return trim_conv2d(x, w, bias, stride=stride, pad=0,
+                           groups=feature_group_count,
+                           activation=activation)
     # Kernel tiling (paper §III): split K x K into sub-kernels, accumulate.
+    # The epilogue is applied once, after the adder tree.
     h_out = (x.shape[1] - k) // stride + 1
     w_out = (x.shape[2] - k) // stride + 1
     out = None
@@ -65,9 +77,19 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
         zs = x[:, r0:r0 + (h_out - 1) * stride + kh,
                c0:c0 + (w_out - 1) * stride + kw, :]
         part = trim_conv2d(zs, w[r0:r0 + kh, c0:c0 + kw], stride=stride,
-                           pad=0)
+                           pad=0, groups=feature_group_count)
         out = part if out is None else out + part   # adder tree
-    return out
+    return ref.epilogue(out, bias, activation)
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                     padding: str = "same", impl: str = "pallas",
+                     bias: jax.Array | None = None,
+                     activation: str | None = None) -> jax.Array:
+    """Depthwise 2D conv (MobileNet-style).  w: (K, K, 1, Cin * mult)."""
+    return conv2d(x, w, stride=stride, padding=padding, impl=impl,
+                  feature_group_count=x.shape[-1], bias=bias,
+                  activation=activation)
 
 
 def depthwise_conv1d(x: jax.Array, w: jax.Array, *,

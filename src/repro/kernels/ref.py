@@ -10,13 +10,32 @@ import jax
 import jax.numpy as jnp
 
 
+def epilogue(y: jax.Array, bias: jax.Array | None = None,
+             activation: str | None = None) -> jax.Array:
+    """Bias + activation epilogue oracle (fused into trim_conv2d)."""
+    if bias is not None:
+        y = y + bias
+    if activation is None:
+        return y
+    fn = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+          "silu": jax.nn.silu}[activation]
+    return fn(y)
+
+
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
-           padding: str = "same") -> jax.Array:
-    """2D convolution oracle.  x: (N, H, W, Cin); w: (K, K, Cin, Cout)."""
+           padding: str = "same", feature_group_count: int = 1,
+           bias: jax.Array | None = None,
+           activation: str | None = None) -> jax.Array:
+    """2D (grouped) convolution oracle.
+
+    x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout); bias: (Cout,) or None.
+    """
     pad = padding.upper()
-    return jax.lax.conv_general_dilated(
+    y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=pad,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=feature_group_count)
+    return epilogue(y, bias, activation)
 
 
 def depthwise_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:

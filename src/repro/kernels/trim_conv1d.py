@@ -5,6 +5,10 @@ non-overlapping chunks of ``TL`` steps; the ``K-1`` boundary timesteps are
 carried across grid steps in a VMEM scratch (shadow registers) instead of
 being re-fetched from HBM; the channel axis is tiled for the VPU lanes.
 
+Chunk geometry, grid and carry shapes come from
+``core.conv_plan.Conv1dPlan`` — the same plan object that models the
+kernel's HBM traffic.
+
 At decode time the same carry *is* the inference state — see
 ``ref.depthwise_conv1d_step``.
 """
@@ -12,12 +16,13 @@ At decode time the same carry *is* the inference state — see
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.conv_plan import Conv1dPlan
 
 
 def _kernel(x_ref, w_ref, o_ref, carry_ref, *, k: int, tl: int):
@@ -40,30 +45,24 @@ def trim_conv1d(x: jax.Array, w: jax.Array, *, tile_l: int | None = None,
                 tile_d: int | None = None, interpret: bool = True
                 ) -> jax.Array:
     """Causal depthwise conv1d.  x: (B, L, D); w: (K, D) -> (B, L, D)."""
-    b, length, d = x.shape
-    k, _ = w.shape
-    assert k >= 2
-    if tile_l is None:
-        tile_l = min(length, 512)
-    if tile_d is None:
-        tile_d = min(d, 1024 if d % 128 == 0 else d)
-    g_tiles = math.ceil(length / tile_l)
-    d_tiles = math.ceil(d / tile_d)
-    lp = g_tiles * tile_l
-    xp = jnp.pad(x, ((0, 0), (0, lp - length), (0, 0)))
+    assert w.shape[0] >= 2
+    plan = Conv1dPlan.build(x.shape, w.shape, dtype_bytes=x.dtype.itemsize,
+                            tile_l=tile_l, tile_d=tile_d)
+    xp = jnp.pad(x, ((0, 0), (0, plan.length_padded - plan.length), (0, 0)))
+    assert xp.shape == plan.padded_input_shape
 
     out = pl.pallas_call(
-        functools.partial(_kernel, k=k, tl=tile_l),
+        functools.partial(_kernel, k=plan.k, tl=plan.tile_l),
         # g innermost: the carry is valid within one (batch, channel) sweep
-        grid=(b, d_tiles, g_tiles),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((1, tile_l, tile_d), lambda bi, di, g: (bi, g, di)),
-            pl.BlockSpec((k, tile_d), lambda bi, di, g: (0, di)),
+            pl.BlockSpec(plan.in_block, lambda bi, di, g: (bi, g, di)),
+            pl.BlockSpec(plan.w_block, lambda bi, di, g: (0, di)),
         ],
-        out_specs=pl.BlockSpec((1, tile_l, tile_d),
+        out_specs=pl.BlockSpec(plan.in_block,
                                lambda bi, di, g: (bi, g, di)),
-        out_shape=jax.ShapeDtypeStruct((b, lp, d), x.dtype),
-        scratch_shapes=[pltpu.VMEM((k - 1, tile_d), x.dtype)],
+        out_shape=jax.ShapeDtypeStruct(plan.padded_input_shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM(plan.carry_shape, x.dtype)],
         interpret=interpret,
     )(xp, w)
-    return out[:, :length]
+    return out[:, :plan.length]

@@ -5,9 +5,9 @@ TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
 * **Input-stationary strips.**  The padded ifmap is tiled into
   non-overlapping strips of ``TH`` rows.  A strip is fetched from HBM
   exactly once and stays resident in VMEM while every C_out tile consumes
-  it — the grid order is ``(N, strip, cout)`` with the input BlockSpec
-  index map *ignoring the cout axis*, which is the BlockSpec image of the
-  paper's P_O slices sharing one Input Recycling Buffer.
+  it — the grid order is ``(N, group, strip, cout)`` with the input
+  BlockSpec index map *ignoring the cout axis*, which is the BlockSpec
+  image of the paper's P_O slices sharing one Input Recycling Buffer.
 
 * **Shadow-register carry.**  The ``K-1`` boundary rows a strip needs from
   its predecessor are *not* re-fetched from HBM (that would be TrIM's
@@ -20,9 +20,19 @@ TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
   stationary weight tile — the triangular PE movement re-shaped for a
   128 x 128 systolic MXU instead of a 3 x 3 scalar PE slice.
 
-* **Adder tree.**  Tap/channel partial sums accumulate in an fp32 register
-  accumulator, the in-kernel analogue of the P_O adder trees.
+* **Adder tree + fused epilogue.**  Tap/channel partial sums accumulate in
+  an fp32 register accumulator (the in-kernel analogue of the P_O adder
+  trees); an optional bias + activation epilogue is applied to the
+  accumulator before the single store to HBM, so inference layers pay no
+  extra output round-trip.
 
+* **Grouped / depthwise.**  ``groups > 1`` adds a group axis to the grid;
+  each group sweeps its own channel slice with its own carry, covering the
+  MobileNet-style depthwise workloads of the paper's OPs/Access study.
+
+All geometry (strips, carry, grid, padded layouts) comes from
+``core.conv_plan.ConvPlan`` — the same object that produces the analytical
+HBM traffic numbers, so the kernel and the model cannot disagree.
 Supports arbitrary K and stride (kernel tiling for huge K is provided by
 ``ops.conv2d``); validated in interpret mode against ``ref.conv2d``.
 """
@@ -30,26 +40,40 @@ Supports arbitrary K and stride (kernel tiling for huge K is provided by
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.conv_plan import ConvPlan
 
-def _kernel(x_ref, w_ref, o_ref, carry_ref, *, kh: int, kw: int,
-            stride: int, th_out: int, w_out: int, n_cout_tiles: int):
-    """One grid step: strip ``g`` of image ``n`` against cout tile ``co``."""
-    g = pl.program_id(1)
-    co = pl.program_id(2)
+ACTIVATIONS = {
+    None: lambda a: a,
+    "relu": lambda a: jnp.maximum(a, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int, th_out: int,
+            w_out: int, n_cout_tiles: int, activation: str | None,
+            has_bias: bool):
+    """One grid step: strip ``g`` of (image ``n``, group) x cout tile."""
+    if has_bias:
+        b_ref, o_ref, carry_ref = rest
+    else:
+        b_ref, (o_ref, carry_ref) = None, rest
+    g = pl.program_id(2)
+    co = pl.program_id(3)
     s = stride
-    r = (kh - 1) % s  # static in-window row offset (see ops.conv2d)
+    r = (kh - 1) % s  # static in-window row offset (ConvPlan.row_offset)
 
     if kh > 1:
         @pl.when(jnp.logical_and(g == 0, co == 0))
         def _reset_carry():
-            # Strip 0 has no predecessor: the carry region is zero padding.
+            # First strip of a (batch, group) sweep: no predecessor, the
+            # carry region is zero padding.
             carry_ref[...] = jnp.zeros_like(carry_ref)
 
         window = jnp.concatenate([carry_ref[...], x_ref[0]], axis=0)
@@ -65,6 +89,10 @@ def _kernel(x_ref, w_ref, o_ref, carry_ref, *, kh: int, kw: int,
             acc += jnp.dot(rows.reshape(th_out * w_out, cin),
                            w_ref[ki, kj],
                            preferred_element_type=jnp.float32)
+    # fused epilogue: bias + activation on the fp32 accumulator
+    if has_bias:
+        acc = acc + b_ref[0].astype(jnp.float32)
+    acc = ACTIVATIONS[activation](acc)
     o_ref[0] = acc.reshape(th_out, w_out, -1).astype(o_ref.dtype)
 
     if kh > 1:
@@ -74,91 +102,103 @@ def _kernel(x_ref, w_ref, o_ref, carry_ref, *, kh: int, kw: int,
             carry_ref[...] = window[-(kh - 1):]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "stride", "pad", "tile_h", "tile_cout", "interpret"))
-def trim_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
-                pad: int = 0, tile_h: int | None = None,
-                tile_cout: int | None = None,
-                interpret: bool = True) -> jax.Array:
-    """Strided 2D convolution.  x: (N, H, W, Cin); w: (K, K, Cin, Cout).
+def make_plan(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+              groups: int = 1, dtype_bytes: int = 4,
+              tile_h: int | None = None,
+              tile_cout: int | None = None) -> ConvPlan:
+    """The exact plan :func:`trim_conv2d` executes for these arguments."""
+    return ConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
+                          groups=groups, dtype_bytes=dtype_bytes,
+                          tile_h=tile_h, tile_cout=tile_cout)
 
-    ``pad`` is symmetric zero padding (use ``(K-1)//2`` for 'same').
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "pad", "tile_h", "tile_cout", "groups", "activation",
+    "interpret"))
+def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+                *, stride: int = 1, pad: int = 0, tile_h: int | None = None,
+                tile_cout: int | None = None, groups: int = 1,
+                activation: str | None = None,
+                interpret: bool = True) -> jax.Array:
+    """Strided (grouped) 2D convolution with fused bias + activation.
+
+    x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout); bias: (Cout,) or None.
+    ``pad`` is symmetric zero padding (use ``(K-1)//2`` for 'same');
+    ``activation`` is one of ``None | "relu" | "gelu" | "silu"``.
     Returns (N, H_out, W_out, Cout).
     """
-    n, h, width, cin = x.shape
-    kh, kw_dim, _, cout = w.shape
-    s = stride
-    h_out = (h + 2 * pad - kh) // s + 1
-    w_out = (width + 2 * pad - kw_dim) // s + 1
-
-    # --- tile planning -----------------------------------------------------
-    if tile_cout is None:
-        tile_cout = min(cout, 128 if cout % 128 == 0 else cout)
-    if tile_h is None:
-        # strip height: multiple of stride, resident set within ~8 MiB
-        wp_bytes = (width + 2 * pad + kh) * cin * x.dtype.itemsize
-        tile_h = max(s, min(h_out * s, (8 << 20) // max(wp_bytes, 1)))
-        tile_h -= tile_h % s
-        tile_h = max(tile_h, s)
-    assert tile_h % s == 0, "tile_h must be a multiple of the stride"
-    th_out = tile_h // s
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}; "
+                         f"choose from {sorted(ACTIVATIONS, key=str)}")
+    plan = make_plan(x.shape, w.shape, stride=stride, pad=pad, groups=groups,
+                     dtype_bytes=x.dtype.itemsize, tile_h=tile_h,
+                     tile_cout=tile_cout)
 
     # --- layout: pad once in HBM, tile into non-overlapping strips ---------
-    delta = (kh - 1) // s                      # top rows of the padded output
-    g_tiles = math.ceil((h_out + delta) / th_out)
-    rows_needed = g_tiles * tile_h
-    pad_bottom = rows_needed - h - pad
-    z = jnp.pad(x, ((0, 0), (pad, max(pad_bottom, 0)), (pad, pad), (0, 0)))
-    if pad_bottom < 0:
-        z = z[:, :rows_needed]
-    wp = z.shape[2]
-    assert wp >= (w_out - 1) * s + kw_dim
+    z = jnp.pad(x, ((0, 0), (pad, max(plan.pad_bottom, 0)), (pad, pad),
+                    (0, 0)))
+    if plan.pad_bottom < 0:
+        z = z[:, :plan.rows_padded]
+    assert z.shape == plan.padded_input_shape, (z.shape, plan)
+    assert plan.wp >= (plan.w_out - 1) * plan.stride + plan.kw
 
-    co_tiles = math.ceil(cout / tile_cout)
-    if cout % tile_cout:
-        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0),
-                        (0, co_tiles * tile_cout - cout)))
+    cpp, cout_pg = plan.cout_padded_per_group, plan.cout_per_group
+    wk = w.reshape(plan.kh, plan.kw, plan.cin_per_group, groups, cout_pg)
+    wk = jnp.pad(wk, ((0, 0),) * 4 + ((0, cpp - cout_pg),))
+    wk = wk.reshape(plan.padded_weight_shape)
+
+    co_tiles = plan.co_tiles
+    in_specs = [
+        # fresh strip: index map ignores `co` -> fetched once per strip,
+        # shared by every cout tile (IRB sharing); one channel slice per
+        # group
+        pl.BlockSpec(plan.in_block, lambda ni, gr, g, co: (ni, g, 0, gr)),
+        # stationary weight tile of this group's cout block
+        pl.BlockSpec(plan.w_block,
+                     lambda ni, gr, g, co: (0, 0, 0, gr * co_tiles + co)),
+    ]
+    inputs = [z, wk]
+    if bias is not None:
+        bp = jnp.pad(bias.reshape(groups, cout_pg),
+                     ((0, 0), (0, cpp - cout_pg)))
+        inputs.append(bp.reshape(1, groups * cpp))
+        in_specs.append(pl.BlockSpec(
+            (1, plan.tile_cout),
+            lambda ni, gr, g, co: (0, gr * co_tiles + co)))
 
     out_padded = pl.pallas_call(
-        functools.partial(_kernel, kh=kh, kw=kw_dim, stride=s, th_out=th_out,
-                          w_out=w_out, n_cout_tiles=co_tiles),
-        grid=(n, g_tiles, co_tiles),
-        in_specs=[
-            # fresh strip: index map ignores `co` -> fetched once per strip,
-            # shared by every cout tile (IRB sharing)
-            pl.BlockSpec((1, tile_h, wp, cin), lambda ni, g, co: (ni, g, 0, 0)),
-            # stationary weight tile
-            pl.BlockSpec((kh, kw_dim, cin, tile_cout),
-                         lambda ni, g, co: (0, 0, 0, co)),
-        ],
-        out_specs=pl.BlockSpec((1, th_out, w_out, tile_cout),
-                               lambda ni, g, co: (ni, g, 0, co)),
-        out_shape=jax.ShapeDtypeStruct(
-            (n, g_tiles * th_out, w_out, co_tiles * tile_cout), x.dtype),
-        scratch_shapes=[pltpu.VMEM((max(kh - 1, 1), wp, cin), x.dtype)],
+        functools.partial(_kernel, kh=plan.kh, kw=plan.kw,
+                          stride=plan.stride, th_out=plan.th_out,
+                          w_out=plan.w_out, n_cout_tiles=co_tiles,
+                          activation=activation, has_bias=bias is not None),
+        grid=plan.grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            plan.out_block,
+            lambda ni, gr, g, co: (ni, g, 0, gr * co_tiles + co)),
+        out_shape=jax.ShapeDtypeStruct(plan.padded_output_shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM(plan.carry_shape, x.dtype)],
         interpret=interpret,
-    )(z, w)
-    return out_padded[:, delta:delta + h_out, :, :cout]
+    )(*inputs)
+
+    out = out_padded[:, plan.delta:plan.delta + plan.h_out]
+    if cpp != cout_pg:
+        out = out.reshape(plan.n, plan.h_out, plan.w_out, groups, cpp)
+        out = out[..., :cout_pg].reshape(plan.n, plan.h_out, plan.w_out,
+                                         plan.cout)
+    return out
 
 
 def hbm_traffic_model(n, h, width, cin, cout, k, stride=1, pad=0,
                       tile_h=8, tile_cout=128, dtype_bytes=4,
                       mode: str = "3dtrim") -> dict:
-    """Analytical HBM bytes for the kernel — TPU image of the paper's model.
+    """Analytical HBM bytes for the kernel — thin wrapper over
+    ``ConvPlan.hbm_bytes`` kept for API compatibility.
 
     ``mode='trim'`` models strips that re-fetch their K-1 halo rows from
     HBM (no carry scratch) — the overhead the shadow registers eliminate.
     """
-    s = stride
-    h_out = (h + 2 * pad - k) // s + 1
-    w_out = (width + 2 * pad - k) // s + 1
-    th_out = tile_h // s
-    g_tiles = math.ceil((h_out + (k - 1) // s) / th_out)
-    wp = width + 2 * pad
-    halo_rows = 0 if mode == "3dtrim" else (g_tiles - 1) * (k - 1)
-    in_bytes = n * (g_tiles * tile_h + halo_rows) * wp * cin * dtype_bytes
-    w_bytes = k * k * cin * cout * dtype_bytes * g_tiles  # refetch per strip
-    out_bytes = n * h_out * w_out * cout * dtype_bytes
-    return dict(input=in_bytes, weights=w_bytes, output=out_bytes,
-                total=in_bytes + w_bytes + out_bytes,
-                overhead_pct=100.0 * halo_rows / max(g_tiles * tile_h, 1))
+    plan = ConvPlan(n=n, h=h, w=width, cin=cin, cout=cout, kh=k, kw=k,
+                    stride=stride, pad=pad, dtype_bytes=dtype_bytes,
+                    tile_h=tile_h, tile_cout=tile_cout)
+    return plan.hbm_bytes(mode)

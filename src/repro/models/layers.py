@@ -142,6 +142,48 @@ def attention_apply(p: dict, x: jax.Array, cfg: ModelConfig, rules: dict, *,
 
 
 # ---------------------------------------------------------------------------
+# Convolution layers (3D-TrIM kernel path; CNN frontends / vision towers)
+# ---------------------------------------------------------------------------
+
+def conv2d_params(k: int, cin: int, cout: int, *, groups: int = 1,
+                  bias: bool = True) -> dict:
+    """Declarations for one (grouped) conv layer on the trim_conv2d path."""
+    # init_params scales by 1/sqrt(shape[-2]) == 1/sqrt(cin/groups); the
+    # extra 1/k recovers He-style 1/sqrt(K^2 * cin/groups) for conv taps
+    p = {"w": Param((k, k, cin // groups, cout), (None, None, None, None),
+                    scale=1.0 / k)}
+    if bias:
+        p["b"] = Param((cout,), (None,), init="zeros")
+    return p
+
+
+def conv2d_apply(p: dict, x: jax.Array, *, stride: int = 1,
+                 padding: str = "same", groups: int = 1,
+                 activation: str | None = "relu",
+                 impl: str = "pallas") -> jax.Array:
+    """One conv layer with the bias + activation epilogue fused into the
+    Pallas kernel (single HBM round-trip for the output)."""
+    return ops.conv2d(x, p["w"], stride=stride, padding=padding, impl=impl,
+                      feature_group_count=groups, bias=p.get("b"),
+                      activation=activation)
+
+
+def depthwise_separable_params(k: int, cin: int, cout: int,
+                               *, bias: bool = True) -> dict:
+    """MobileNet-style depthwise 3x3 + pointwise 1x1 block."""
+    return {"dw": conv2d_params(k, cin, cin, groups=cin, bias=bias),
+            "pw": conv2d_params(1, cin, cout, bias=bias)}
+
+
+def depthwise_separable_apply(p: dict, x: jax.Array, *, stride: int = 1,
+                              activation: str | None = "relu",
+                              impl: str = "pallas") -> jax.Array:
+    h = conv2d_apply(p["dw"], x, stride=stride, groups=x.shape[-1],
+                     activation=activation, impl=impl)
+    return conv2d_apply(p["pw"], h, activation=activation, impl=impl)
+
+
+# ---------------------------------------------------------------------------
 # Dense MLPs
 # ---------------------------------------------------------------------------
 

@@ -1,6 +1,64 @@
 import os
 import sys
+import types
 
 # smoke tests and benches see the single real CPU device (the dry-run sets
 # its own 512-device flag in its own process)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:                                    # pragma: no cover - env-dependent
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Minimal stand-in so the property tests still run (as deterministic
+    # random sweeps) on a bare interpreter without the hypothesis package.
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must not see the
+            # wrapped signature, or it would treat the strategy parameters
+            # as fixtures)
+            def wrapper():
+                n = getattr(wrapper, "_stub_max_examples", 10)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers, _st.sampled_from = _integers, _sampled_from
+    _st.booleans, _st.floats = _booleans, _floats
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,200 @@
+"""ConvPlan subsystem tests: the plan is the single source of truth for
+strip/tile/traffic math — the kernel's actual padded layouts and grids must
+be byte-identical to the analytical model, for dense, strided, grouped and
+depthwise geometries (VGG-16 and MobileNet layers included)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvPlan, mobilenet_layers, vgg16_layers
+from repro.core.conv_plan import Conv1dPlan
+from repro.core.roofline import conv_plan_roofline
+from repro.kernels import ops, ref
+from repro.kernels.trim_conv2d import (hbm_traffic_model, make_plan,
+                                       trim_conv2d)
+
+RNG = np.random.default_rng(11)
+
+
+def _allclose(a, b, tol=2e-3):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    scale = float(np.abs(b).max()) + 1e-6
+    assert float(np.abs(a - b).max()) / scale < tol
+
+
+# ---------------------------------------------------------------------------
+# Plan <-> kernel consistency (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layer", [vgg16_layers()[2], vgg16_layers()[7],
+                                   mobilenet_layers()[0],   # depthwise 3x3
+                                   mobilenet_layers()[1]])  # pointwise 1x1
+def test_plan_is_shared_by_kernel_and_model(layer):
+    """Kernel grid geometry and analytical HBM bytes come from the SAME
+    ConvPlan for VGG-16 and depthwise MobileNet layers."""
+    plan = layer.plan()
+    # the plan the kernel executes for these arrays is the same object
+    groups = layer.groups
+    kplan = make_plan(
+        (1, layer.ifmap, layer.ifmap, layer.in_channels),
+        (layer.kernel, layer.kernel, layer.in_channels // groups,
+         layer.out_channels),
+        stride=layer.stride, pad=layer.padding, groups=groups)
+    assert plan == kplan
+    # grid covers the whole problem exactly
+    n, g, strips, co = plan.grid
+    assert (n, g) == (1, groups)
+    assert strips * plan.th_out >= plan.h_out + plan.delta
+    assert co * plan.tile_cout >= plan.cout // groups
+    # analytical input bytes == the padded array the kernel DMAs, exactly
+    t = plan.hbm_bytes("3dtrim")
+    assert t["input"] == math.prod(plan.padded_input_shape) \
+        * plan.dtype_bytes
+    assert t["output"] == plan.n * plan.h_out * plan.w_out * plan.cout \
+        * plan.dtype_bytes
+    # roofline reads the same plan
+    terms = conv_plan_roofline(layer.name, plan)
+    assert terms.hbm_bytes_per_dev == t["total"]
+    assert terms.flops_per_dev == plan.flops == layer.macs * 2
+
+
+def test_traffic_equals_actual_padded_bytes():
+    """ConvPlan traffic == the byte counts of the arrays the kernel builds:
+    run the kernel and check the padded layouts it asserts against."""
+    x = jnp.asarray(RNG.standard_normal((2, 17, 13, 4)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 4, 10)) * .3, jnp.float32)
+    plan = make_plan(x.shape, w.shape, stride=2, pad=1, tile_h=4,
+                     tile_cout=4)
+    out = trim_conv2d(x, w, stride=2, pad=1, tile_h=4, tile_cout=4)
+    assert out.shape == (plan.n, plan.h_out, plan.w_out, plan.cout)
+    t = plan.hbm_bytes("3dtrim")
+    # input: padded array fetched strip-by-strip, each strip exactly once
+    assert t["input"] == math.prod(plan.padded_input_shape) * 4
+    # output: the useful (sliced) result the caller receives
+    assert t["output"] == out.size * 4
+    # weights: one full (unpadded) weight stream per strip sweep
+    assert t["weights"] == w.size * 4 * plan.g_tiles
+    # trim mode re-fetches K-1 halo rows per strip after the first
+    halo = plan.hbm_bytes("trim")["input"] - t["input"]
+    assert halo == (plan.g_tiles - 1) * (plan.kh - 1) * plan.wp \
+        * plan.cin * 4 * plan.n
+    _allclose(out, ref.conv2d(jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0))),
+                              w, stride=2, padding="valid"))
+
+
+def test_legacy_traffic_wrapper_delegates_to_plan():
+    a = hbm_traffic_model(1, 224, 224, 64, 64, 3, tile_h=8, mode="3dtrim")
+    b = hbm_traffic_model(1, 224, 224, 64, 64, 3, tile_h=8, mode="trim")
+    plan = ConvPlan(n=1, h=224, w=224, cin=64, cout=64, kh=3, kw=3,
+                    tile_h=8)
+    assert a == plan.hbm_bytes("3dtrim")
+    assert b == plan.hbm_bytes("trim")
+    assert b["input"] > a["input"] and a["overhead_pct"] == 0.0
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        ConvPlan(n=1, h=8, w=8, cin=4, cout=8, kh=3, kw=3, stride=2,
+                 tile_h=3)              # tile_h not a stride multiple
+    with pytest.raises(ValueError):
+        ConvPlan(n=1, h=8, w=8, cin=4, cout=9, kh=3, kw=3, groups=2)
+    with pytest.raises(ValueError):
+        make_plan((1, 8, 8, 4), (3, 3, 4, 8), groups=2)  # cin mismatch
+
+
+# ---------------------------------------------------------------------------
+# Kernel edge geometry vs the oracle
+# ---------------------------------------------------------------------------
+
+def test_conv2d_even_kernel_strided():
+    """stride > 1 with K even exercises the (K-1) % s != 0 row offset."""
+    x = jnp.asarray(RNG.standard_normal((1, 18, 15, 5)), jnp.float32)
+    for k, s in [(4, 2), (2, 2), (4, 3), (6, 2)]:
+        w = jnp.asarray(RNG.standard_normal((k, k, 5, 6)) * .2, jnp.float32)
+        _allclose(ops.conv2d(x, w, stride=s, padding="valid"),
+                  ref.conv2d(x, w, stride=s, padding="valid"))
+
+
+def test_conv2d_tile_h_not_dividing_h_out():
+    """h_out = 14 with tile_h in {3, 4, 5}: bottom strips are ragged."""
+    x = jnp.asarray(RNG.standard_normal((1, 16, 10, 4)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 4, 8)) * .3, jnp.float32)
+    want = ref.conv2d(x, w, padding="valid")
+    for th in (3, 4, 5):
+        _allclose(trim_conv2d(x, w, tile_h=th), want)
+
+
+def test_conv2d_cout_not_dividing_tile_cout():
+    """cout = 10 with tile_cout = 4: the last cout tile is zero-padded."""
+    x = jnp.asarray(RNG.standard_normal((1, 12, 9, 3)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 3, 10)) * .3, jnp.float32)
+    _allclose(trim_conv2d(x, w, tile_cout=4),
+              ref.conv2d(x, w, padding="valid"))
+
+
+# ---------------------------------------------------------------------------
+# Grouped / depthwise + fused epilogue (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("groups,cin,cout", [(2, 8, 6), (4, 8, 8),
+                                             (8, 8, 8), (8, 8, 16)])
+def test_grouped_conv_vs_oracle(groups, cin, cout):
+    x = jnp.asarray(RNG.standard_normal((2, 12, 11, cin)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, cin // groups, cout)) * .3,
+                    jnp.float32)
+    for stride, padding in [(1, "same"), (2, "valid")]:
+        _allclose(
+            ops.conv2d(x, w, stride=stride, padding=padding,
+                       feature_group_count=groups),
+            ref.conv2d(x, w, stride=stride, padding=padding,
+                       feature_group_count=groups))
+
+
+def test_depthwise_conv2d_helper():
+    x = jnp.asarray(RNG.standard_normal((1, 14, 14, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 1, 8)) * .3, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((8,)), jnp.float32)
+    _allclose(ops.depthwise_conv2d(x, w, bias=b, activation="relu"),
+              ref.conv2d(x, w, feature_group_count=8, bias=b,
+                         activation="relu"))
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu"])
+def test_fused_epilogue_vs_oracle(activation):
+    x = jnp.asarray(RNG.standard_normal((2, 10, 10, 6)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 6, 12)) * .3, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((12,)), jnp.float32)
+    _allclose(ops.conv2d(x, w, bias=b, activation=activation),
+              ref.conv2d(x, w, bias=b, activation=activation))
+
+
+def test_fused_epilogue_kernel_tiled_path():
+    """K > MAX_NATIVE_K: epilogue applied once after the adder tree."""
+    x = jnp.asarray(RNG.standard_normal((1, 30, 30, 3)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((11, 11, 3, 4)) * .1, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((4,)), jnp.float32)
+    _allclose(
+        ops.conv2d(x, w, stride=4, padding="valid", bias=b,
+                   activation="relu"),
+        ref.conv2d(x, w, stride=4, padding="valid", bias=b,
+                   activation="relu"), tol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# 1D plan
+# ---------------------------------------------------------------------------
+
+def test_conv1d_plan_geometry():
+    plan = Conv1dPlan.build((2, 100, 24), (4, 24))
+    assert plan.grid == (2, 1, 1)
+    assert plan.length_padded >= 100
+    assert plan.carry_shape == (3, 24)
+    t = plan.hbm_bytes("3dtrim")
+    assert t["input"] == math.prod(plan.padded_input_shape) * 4
+    assert plan.hbm_bytes("trim")["total"] >= t["total"]
+    assert plan.arithmetic_intensity() > 0

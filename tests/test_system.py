@@ -20,7 +20,7 @@ def test_end_to_end_train_checkpoint_serve(tmp_path):
     cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
                       n_kv_heads=2, d_ff=160, vocab=32, attn_impl="ref",
                       remat=False)
-    opt = AdamWConfig(lr=3e-3, warmup_steps=5, decay_steps=200)
+    opt = AdamWConfig(lr=3e-2, warmup_steps=5, decay_steps=200)
     dc = DataConfig(batch=16, seq=32, vocab=32, task="copy", seed=0)
     stream = SyntheticStream(dc)
     step = jax.jit(steps.make_train_step(cfg, opt, RULES))
@@ -29,7 +29,7 @@ def test_end_to_end_train_checkpoint_serve(tmp_path):
 
     mgr = CheckpointManager(str(tmp_path))
     losses = []
-    for i in range(60):
+    for i in range(120):
         batch = jax.tree.map(jnp.asarray, next(stream))
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
