@@ -6,23 +6,27 @@ the dry-run analysis, producing a before/after roofline comparison that is
 appended to artifacts/hillclimb.json and rendered for EXPERIMENTS.md §Perf.
 
 ``--conv <layer>`` hillclimbs the trim_conv2d ``ConvPlan`` knobs
-(tile_h x tile_cout) for one conv layer against the analytical roofline —
-the same plan object the kernel executes, so the winning knobs transfer
-directly to ``trim_conv2d(tile_h=..., tile_cout=...)``.
+(tile_h x tile_cout x dataflow) for one conv layer against the analytical
+roofline — the same plan object the kernel executes, so the winning knobs
+transfer directly to ``trim_conv2d(tile_h=..., tile_cout=...,
+dataflow=...)``.  ``--measure`` additionally wall-clocks the top
+candidates through the real kernel (slow in interpret mode; the true
+refinement loop runs on TPU), and ``--write-cache`` persists the winner
+into the autotune cache ``ops.conv2d`` consults by default — the sweep
+seeds the cache.
 
   PYTHONPATH=src python -m benchmarks.hillclimb --exp <name> | --list
   PYTHONPATH=src python -m benchmarks.hillclimb --conv vgg16:conv2
+  PYTHONPATH=src python -m benchmarks.hillclimb --conv mobilenet:dw1 \\
+      --measure --write-cache
 """
 
-# must precede any jax import
-import os  # noqa: E402
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-import argparse      # noqa: E402
-import dataclasses   # noqa: E402
-import json          # noqa: E402
-import sys           # noqa: E402
-import time          # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -184,45 +188,78 @@ def _conv_layer(name: str):
                      f"have {[l.name for l in layers]}")
 
 
-def conv_hillclimb(name: str, mode: str = "3dtrim") -> dict:
-    """Grid-sweep (tile_h, tile_cout) for one layer; score by the modeled
-    step time max(T_comp, T_mem) with a VMEM feasibility constraint."""
-    from repro.core.conv_plan import STRIP_VMEM_BUDGET
+def conv_hillclimb(name: str, dataflows=("carry", "halo"), *,
+                   measure: bool = False, measure_top_k: int = 4,
+                   write_cache: bool = False) -> dict:
+    """Grid-sweep (tile_h, tile_cout, dataflow) for one layer; score by
+    the modeled step time max(T_comp, T_mem) — each dataflow billed its
+    own traffic mode — with a VMEM feasibility constraint.
+
+    ``measure=True`` wall-clocks the ``measure_top_k`` model-best
+    candidates through the actual Pallas kernel and re-ranks by measured
+    us.  ``write_cache=True`` persists the winner into the autotune cache
+    under the key ``ops.conv2d`` looks up for this layer's input.
+    """
+    from repro.core import autotune
+    from repro.core.conv_plan import STRIP_VMEM_BUDGET, ConvPlan
     from repro.core.roofline import conv_plan_roofline
-    from repro.core.tiling import VMEM_BYTES
+    from repro.kernels.ops import kernel_input_shape
     layer = _conv_layer(name)
-    baseline = layer.plan()
-    base_t = conv_plan_roofline(layer.name, baseline, mode).step_time_s
-    s = layer.stride
-    rows, best = [], None
-    h_ticks = sorted({s, 2 * s, 4 * s, 8 * s, 16 * s, 32 * s,
-                      baseline.tile_h, layer.out_size * s})
-    c_ticks = sorted({32, 64, 128, 256, baseline.tile_cout,
-                      layer.out_channels // layer.groups})
-    for th in h_ticks:
-        for tc in c_ticks:
-            if tc > layer.out_channels // layer.groups:
-                continue
-            try:
-                plan = layer.plan(tile_h=th, tile_cout=tc)
-            except ValueError:
-                continue
-            if plan.vmem_resident_bytes > VMEM_BYTES:
-                continue                 # infeasible resident set
-            t = conv_plan_roofline(layer.name, plan, mode).step_time_s
-            row = dict(tile_h=th, tile_cout=tc, step_time_s=t,
-                       vmem_mib=plan.vmem_resident_bytes / 2**20,
-                       hbm_mb=plan.hbm_bytes(mode)["total"] / 1e6,
-                       ai=plan.arithmetic_intensity(mode))
-            rows.append(row)
-            if best is None or t < best["step_time_s"]:
-                best = row
-    result = dict(experiment=f"conv:{name}", mode=mode,
+    w_shape = (layer.kernel, layer.kernel,
+               layer.in_channels // layer.groups, layer.out_channels)
+    # sweep (and key) the problem ops.conv2d actually runs: the 'same'
+    # pre-pad folded into the input shape — asymmetric for stride > 1,
+    # NOT the layer's symmetric paper padding — with residual pad 0
+    x_shape, pad = kernel_input_shape(
+        (1, layer.ifmap, layer.ifmap, layer.in_channels), layer.kernel,
+        layer.stride, "same" if layer.padding else "valid")
+    baseline = ConvPlan.build(x_shape, w_shape, stride=layer.stride,
+                              pad=pad, groups=layer.groups)
+    base_t = conv_plan_roofline(layer.name, baseline).step_time_s
+    # same candidate generator and ranking the autotuner uses — the sweep
+    # and `autotune.tune` cannot pick different winners for one layer
+    plans = [p for p in autotune.candidate_knobs(
+                 x_shape, w_shape, stride=layer.stride, pad=pad,
+                 groups=layer.groups)
+             if p.dataflow in dataflows]
+    ranked = sorted(plans, key=autotune._model_score)
+
+    def _row(p):
+        return dict(tile_h=p.tile_h, tile_cout=p.tile_cout,
+                    dataflow=p.dataflow,
+                    step_time_s=conv_plan_roofline(layer.name,
+                                                   p).step_time_s,
+                    vmem_mib=p.vmem_resident_bytes / 2**20,
+                    hbm_mb=p.hbm_bytes()["total"] / 1e6,
+                    ai=p.arithmetic_intensity())
+
+    rows = [_row(p) for p in ranked]
+    if measure and rows:
+        for plan, row in zip(ranked[:measure_top_k],
+                             rows[:measure_top_k]):
+            row["measured_us"] = autotune._measure_plan(
+                plan, stride=layer.stride, pad=pad, groups=layer.groups)
+        best = min(rows[:measure_top_k], key=lambda r: r["measured_us"])
+    else:
+        best = rows[0] if rows else None
+    result = dict(experiment=f"conv:{name}",
+                  dataflows=list(dataflows), measured=measure,
                   baseline=dict(tile_h=baseline.tile_h,
                                 tile_cout=baseline.tile_cout,
+                                dataflow=baseline.dataflow,
                                 step_time_s=base_t,
                                 budget=STRIP_VMEM_BUDGET),
                   best=best, n_candidates=len(rows), sweep=rows)
+    if write_cache and best is not None:
+        key = autotune.make_key(x_shape, w_shape, stride=layer.stride,
+                                pad=pad, groups=layer.groups)
+        path = autotune.store(key, dict(
+            tile_h=best["tile_h"], tile_cout=best["tile_cout"],
+            dataflow=best["dataflow"],
+            source="measured" if measure else "model",
+            model_step_time_s=best["step_time_s"],
+            measured_us=best.get("measured_us")))
+        result["cache_key"], result["cache_path"] = key, path
     return result
 
 
@@ -259,7 +296,18 @@ def main():
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--conv", default=None, metavar="NET[:LAYER]",
                     help="hillclimb ConvPlan knobs, e.g. vgg16:conv2")
-    ap.add_argument("--mode", default="3dtrim", choices=["3dtrim", "trim"])
+    ap.add_argument("--dataflow", default="both",
+                    choices=["carry", "halo", "both"],
+                    help="which conv dataflow(s) to sweep")
+    ap.add_argument("--mode", default=None, choices=["3dtrim", "trim"],
+                    help="legacy accounting alias: 3dtrim=carry, "
+                         "trim=halo")
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock the top conv candidates through the "
+                         "real kernel (slow in interpret mode)")
+    ap.add_argument("--write-cache", action="store_true",
+                    help="persist the winning conv knobs into the "
+                         "autotune cache ops.conv2d consults")
     args = ap.parse_args()
     if args.list:
         for name, e in EXPERIMENTS.items():
@@ -267,12 +315,21 @@ def main():
         return
     os.makedirs(ART, exist_ok=True)
     if args.conv:
-        res = conv_hillclimb(args.conv, args.mode)
+        if args.mode is not None:
+            dataflows = ("carry",) if args.mode == "3dtrim" else ("halo",)
+        elif args.dataflow == "both":
+            dataflows = ("carry", "halo")
+        else:
+            dataflows = (args.dataflow,)
+        res = conv_hillclimb(args.conv, dataflows, measure=args.measure,
+                             write_cache=args.write_cache)
         b, base = res["best"], res["baseline"]
         print(json.dumps(dict(experiment=res["experiment"],
                               baseline=base, best=b,
                               speedup=base["step_time_s"]
                               / max(b["step_time_s"], 1e-12)), indent=1))
+        if "cache_path" in res:
+            print(f"cached {res['cache_key']} -> {res['cache_path']}")
         out_path = os.path.join(ART, "conv_hillclimb.json")
         results = json.load(open(out_path)) if os.path.exists(out_path) \
             else []
@@ -280,6 +337,9 @@ def main():
         json.dump(results, open(out_path, "w"), indent=1)
         print("appended to", out_path)
         return
+    # dry-run path only: the 512-device mesh must be configured before
+    # the first jax backend initialization (--conv/--list never need it)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     out_path = os.path.join(ART, "hillclimb.json")
     results = []
     if os.path.exists(out_path):

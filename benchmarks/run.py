@@ -7,7 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * sim_*         — cycle-simulator throughput (us/call = one 14x14 slice
                     pass), derived = measured OPs/external-access.
   * kernel_*      — Pallas kernel wall time in interpret mode vs the jnp
-                    oracle (CPU validation timing, not TPU perf).
+                    oracle (CPU validation timing, not TPU perf); the
+                    conv rows cover BOTH dataflow modes (carry and halo)
+                    so a regression in either path is visible, plus the
+                    tuned-tiles + packed-weights config vs the seed
+                    default (derived = speedup).
   * roofline_*    — summary of the dry-run artifact (derived = projected
                     roofline fraction), if artifacts/dryrun_matrix.json
                     exists.
@@ -16,8 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     representative VGG-16 and MobileNet (depthwise) layers
                     (derived = flop/byte | modeled bound).
 
-Run: PYTHONPATH=src python -m benchmarks.run [--smoke]
+Run: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json OUT.json]
 ``--smoke`` runs a fast CI subset (analytical models + one tiny kernel).
+``--json OUT.json`` additionally writes the rows as machine-readable JSON
+(name/us/derived + git rev) — the perf-trajectory artifact CI uploads.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ import argparse
 import glob
 import json
 import os
+import subprocess
 import time
 
 import numpy as np
@@ -102,18 +109,43 @@ def bench_conv_plan(emit):
 
 def bench_kernels(emit, smoke: bool = False):
     import jax.numpy as jnp
+    from repro.core import autotune
     from repro.kernels import ops, ref
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.standard_normal((1, 28, 28, 16)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 16, 32)) * .2, jnp.float32)
     b = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
-    us_k = _time(lambda: ops.conv2d(x, w, impl="pallas").block_until_ready())
     us_r = _time(lambda: ops.conv2d(x, w, impl="ref").block_until_ready())
-    emit("kernel_conv2d_pallas_interp", us_k, f"oracle={us_r:.0f}us")
+    # both dataflow modes vs the same oracle, so a regression in either
+    # path shows up as its own ratio
+    us_df = {}
+    for df in ("carry", "halo"):
+        us_df[df] = _time(lambda: ops.conv2d(
+            x, w, impl="pallas", dataflow=df,
+            use_autotune_cache=False).block_until_ready())
+        emit(f"kernel_conv2d_{df}_interp", us_df[df],
+             f"oracle={us_r:.0f}us|ratio={us_df[df] / us_r:.2f}")
+    us_k = us_df["carry"]   # seed default dataflow
 
     us_f = _time(lambda: ops.conv2d(
-        x, w, bias=b, activation="relu", impl="pallas").block_until_ready())
+        x, w, bias=b, activation="relu", impl="pallas",
+        use_autotune_cache=False).block_until_ready())
     emit("kernel_conv2d_fused_epilogue", us_f, f"unfused={us_k:.0f}us")
+
+    # the conv execution engine closed loop: measured-tuned tiles +
+    # pre-packed weights vs the seed default config, same math
+    rec = autotune.tune((1, 30, 30, 16), tuple(w.shape), stride=1, pad=0,
+                        measure=True, write=False)
+    pk = ops.pack_conv2d_weights(w, b, tile_cout=rec["tile_cout"],
+                                 tile_h=rec["tile_h"],
+                                 dataflow=rec["dataflow"])
+    us_t = _time(lambda: ops.conv2d(
+        x, pk, activation="relu",
+        use_autotune_cache=False).block_until_ready())
+    emit("kernel_conv2d_tuned_packed", us_t,
+         f"default={us_f:.0f}us|speedup={us_f / max(us_t, 1e-9):.2f}x|"
+         f"tile_h={rec['tile_h']}|tile_cout={rec['tile_cout']}|"
+         f"dataflow={rec['dataflow']}")
 
     wd = jnp.asarray(rng.standard_normal((3, 3, 1, 16)) * .2, jnp.float32)
     us_d = _time(lambda: ops.depthwise_conv2d(
@@ -158,26 +190,51 @@ def bench_roofline(emit):
              f"frac={rf['roofline_fraction']:.3f}|dom={rf['dominant']}")
 
 
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: analytical models + tiny kernels")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write rows as JSON (+ git rev) for the "
+                         "perf-trajectory artifact")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    rows = []
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
+        rows.append(dict(name=name, us=round(us, 1), derived=derived))
 
     bench_fig1(emit)
     bench_fig6(emit)
     bench_conv_plan(emit)
     if args.smoke:
         bench_kernels(emit, smoke=True)
-        return
-    bench_table1(emit)
-    bench_simulator(emit)
-    bench_kernels(emit)
-    bench_roofline(emit)
+    else:
+        bench_table1(emit)
+        bench_simulator(emit)
+        bench_kernels(emit)
+        bench_roofline(emit)
+    if args.json:
+        payload = dict(rev=_git_rev(), smoke=args.smoke,
+                       timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       rows=rows)
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

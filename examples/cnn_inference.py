@@ -3,6 +3,13 @@ the trim_conv2d Pallas kernel — bias + ReLU fused into the kernel epilogue,
 a MobileNet-style depthwise-separable block on the grouped-conv path, and
 the per-layer OPs/Access accounting of Fig. 6 printed alongside.
 
+This is the closed loop of the conv execution engine (DESIGN.md §4):
+each layer is autotuned once (model-guided (tile_h, tile_cout, dataflow)
+search persisted in a JSON cache), weights are pre-packed into the
+kernel's padded layout at load time, and the forward pass then runs
+entirely on packed params and cached plans — ``ops.conv2d`` finds every
+knob in the cache.
+
 Every traffic/arithmetic-intensity number comes from the same ``ConvPlan``
 objects the kernels execute.
 
@@ -11,12 +18,15 @@ objects the kernels execute.
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# keep the example's tuning records repo-local (and the run reproducible)
+os.environ.setdefault("REPRO_CONVTUNE_CACHE", os.path.join(
+    os.path.dirname(__file__), "..", "artifacts", "convtune.json"))
 
 import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import compare_layer, mobilenet_layers, vgg16_layers
+from repro.core import autotune, compare_layer, mobilenet_layers, vgg16_layers
 from repro.core.roofline import conv_plan_roofline
 from repro.models import layers
 
@@ -28,17 +38,35 @@ x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 32, 32, 3)),
                 jnp.float32)
 channels = [8, 8, 16, 16, 32]
 from repro.models.base import init_params
+
+# load time: tune each layer's plan once (persisted), pack each layer's
+# weights into the kernel layout once
+packed, shapes, cur = [], [], x.shape
 for i, c in enumerate(channels):
-    p = init_params(layers.conv2d_params(3, x.shape[-1], c),
+    p = init_params(layers.conv2d_params(3, cur[-1], c),
                     jax.random.fold_in(rng, i))
+    w_shape = p["w"].shape
+    kshape, pad = (cur[0], cur[1] + 2, cur[2] + 2, cur[3]), 0  # 'same', K=3
+    autotune.tune(kshape, w_shape, stride=1, pad=pad)
+    packed.append(layers.conv2d_pack_params(p, x_shape=cur))
+    shapes.append(cur)
+    hw = (cur[1] // 2, cur[2] // 2) if i % 2 == 1 else (cur[1], cur[2])
+    cur = (cur[0], *hw, c)
+
+# inference: packed params + cached plans only
+for i, p in enumerate(packed):
     x = layers.conv2d_apply(p, x, activation="relu")   # fused bias+ReLU
     if i % 2 == 1:
         x = x[:, ::2, ::2, :]          # poor man's maxpool (stride slice)
 print("reduced VGG head output:", x.shape, "mean", float(x.mean()))
+rec = autotune.knobs_for((1, 34, 34, 3), (3, 3, 3, 8), stride=1, pad=0)
+print("layer-0 cached plan:", rec)
 
-# depthwise-separable block (MobileNet scenario, grouped kernel path)
+# depthwise-separable block (MobileNet scenario, grouped kernel path),
+# same treatment: pack both convs at load time
 p = init_params(layers.depthwise_separable_params(3, x.shape[-1], 64),
                 jax.random.fold_in(rng, 99))
+p = layers.depthwise_separable_pack_params(p, x_shape=x.shape, stride=2)
 y = layers.depthwise_separable_apply(p, x, stride=2)
 print("depthwise-separable block output:", y.shape, "mean", float(y.mean()))
 
@@ -50,12 +78,14 @@ for layer in vgg16_layers():
 
 print("\nTPU-side ConvPlan traffic + roofline (same plan the kernel runs):")
 for layer in [vgg16_layers()[1]] + mobilenet_layers()[:2]:
-    plan = layer.plan()
-    for mode in ("3dtrim", "trim"):
-        t = plan.hbm_bytes(mode)
-        print(f"  {layer.name:>6s} [{mode:7s}]: input {t['input']/1e6:7.1f} MB "
+    for dataflow in ("carry", "halo"):
+        plan = layer.plan(dataflow=dataflow)
+        t = plan.hbm_bytes()
+        print(f"  {layer.name:>6s} [{dataflow:5s}]: input "
+              f"{t['input']/1e6:7.1f} MB "
               f"(halo overhead {t['overhead_pct']:4.1f}%)  "
-              f"AI {plan.arithmetic_intensity(mode):7.1f} flop/B")
+              f"AI {plan.arithmetic_intensity():7.1f} flop/B")
+    plan = layer.plan()
     terms = conv_plan_roofline(layer.name, plan)
     print(f"  {layer.name:>6s} roofline: T_comp {terms.t_compute*1e6:.0f} us "
           f"T_mem {terms.t_memory*1e6:.0f} us -> {terms.dominant}-bound, "

@@ -1,0 +1,264 @@
+"""Per-layer conv autotuner with a persistent JSON cache (DESIGN.md §4).
+
+The companion TrIM paper (arXiv:2408.01254) shows tile-shape choice
+dominates achievable efficiency per layer, and "Computing-In-Memory
+Dataflow for Minimal Buffer Traffic" (arXiv:2508.14375) picks its dataflow
+per layer from an analytical buffer-traffic model.  This module is that
+selection layer for the TPU kernel: it searches the
+``(tile_h, tile_cout, dataflow)`` space of :class:`~repro.core.conv_plan.
+ConvPlan`, scores candidates by the plan's own roofline step time
+(``max(T_comp, T_mem)`` over the plan's analytical HBM bytes), optionally
+refines the leaders by wall-clock measurement of the real kernel, and
+persists the winner in a JSON cache that ``ops.conv2d`` consults on every
+call.
+
+Cache location: ``$REPRO_CONVTUNE_CACHE`` if set, else
+``~/.cache/repro/convtune.json``.  Schema (version 1)::
+
+    {"version": 1,
+     "entries": {"<key>": {"tile_h": int, "tile_cout": int,
+                           "dataflow": "carry"|"halo",
+                           "source": "model"|"measured",
+                           "model_step_time_s": float,
+                           "measured_us": float|null}}}
+
+Keys are ``conv2d:n..h..w..cin..cout..k..s..p..g..:<dtype>:<backend>`` —
+one entry per (shape, stride, pad, groups, dtype, backend) problem, so a
+cache tuned on TPU never feeds knobs to an interpret-mode CPU run and
+vice versa.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.conv_plan import ConvPlan
+from repro.core.roofline import conv_plan_roofline
+from repro.core.tiling import VMEM_BYTES
+
+DATAFLOWS = ("carry", "halo")
+CACHE_ENV = "REPRO_CONVTUNE_CACHE"
+AUTOTUNE_ENV = "REPRO_CONV_AUTOTUNE"      # set to "0" to disable lookups
+_SCHEMA_VERSION = 1
+
+# path -> entries dict; "missing file" memoized as {} so the hot-path
+# lookup in ops.conv2d costs one dict probe, not a stat per call.
+_MEM: dict[str, dict] = {}
+
+
+# ---------------------------------------------------------------------------
+# Cache file
+# ---------------------------------------------------------------------------
+
+def cache_path(path: str | None = None) -> str:
+    """Resolve the cache file: explicit arg > $REPRO_CONVTUNE_CACHE >
+    ~/.cache/repro/convtune.json."""
+    if path:
+        return path
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "convtune.json")
+
+
+def reset_memory_cache() -> None:
+    """Drop the in-process cache memo (tests / after external writes)."""
+    _MEM.clear()
+
+
+def _entries(path: str) -> dict:
+    if path not in _MEM:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            _MEM[path] = dict(data.get("entries", {}))
+        except (OSError, ValueError):
+            _MEM[path] = {}
+    return _MEM[path]
+
+
+def lookup(key: str, path: str | None = None) -> dict | None:
+    """Cached record for ``key``, or None."""
+    return _entries(cache_path(path)).get(key)
+
+
+def store(key: str, record: dict, path: str | None = None) -> str:
+    """Insert/overwrite one record and persist the cache atomically."""
+    path = cache_path(path)
+    entries = _entries(path)
+    entries[key] = dict(record)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": _SCHEMA_VERSION, "entries": entries}, f,
+                  indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+
+def make_key(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+             groups: int = 1, dtype: str = "float32",
+             backend: str | None = None) -> str:
+    """Cache key for one conv problem.  ``x_shape`` is the shape the
+    kernel actually sees (i.e. *after* any 'same' pre-padding, with
+    ``pad`` the residual symmetric padding)."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    n, h, w, cin = x_shape
+    kh, kw, _, cout = w_shape
+    return (f"conv2d:n{n}h{h}w{w}cin{cin}cout{cout}k{kh}x{kw}"
+            f"s{stride}p{pad}g{groups}:{dtype}:{backend}")
+
+
+def _valid_record(rec, stride: int) -> bool:
+    return (isinstance(rec, dict)
+            and isinstance(rec.get("tile_h"), int)
+            and isinstance(rec.get("tile_cout"), int)
+            and rec.get("dataflow") in DATAFLOWS
+            and rec["tile_h"] >= stride and rec["tile_h"] % stride == 0
+            and rec["tile_cout"] >= 1)
+
+
+def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+              groups: int = 1, dtype: str = "float32",
+              backend: str | None = None,
+              path: str | None = None) -> dict | None:
+    """The cached (validated) knobs for a problem, or None — the lookup
+    ``ops.conv2d`` performs by default.  Honors ``REPRO_CONV_AUTOTUNE=0``.
+    """
+    if os.environ.get(AUTOTUNE_ENV, "1") == "0":
+        return None
+    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                          groups=groups, dtype=dtype, backend=backend),
+                 path)
+    if rec is not None and _valid_record(rec, stride):
+        return rec
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def candidate_knobs(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+                    groups: int = 1, dtype_bytes: int = 4,
+                    vmem_bytes: int = VMEM_BYTES) -> list[ConvPlan]:
+    """VMEM-feasible candidate plans over (tile_h, tile_cout, dataflow).
+
+    Strip-height ticks cover powers of two plus the two structurally
+    special points: the auto default and the full-height strip
+    ``(h_out + delta) * stride`` that collapses the grid to one strip per
+    (image, group) — zero carry/halo traffic and the fewest grid steps.
+    """
+    base = ConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
+                          groups=groups, dtype_bytes=dtype_bytes)
+    s = base.stride
+    full_h = (base.h_out + base.delta) * s
+    h_ticks = sorted({t for t in (s, 2 * s, 4 * s, 8 * s, 16 * s, 32 * s,
+                                  base.tile_h, full_h) if t <= full_h})
+    cout_pg = base.cout_per_group
+    c_ticks = sorted({t for t in (32, 64, 128, 256, base.tile_cout,
+                                  cout_pg) if t <= cout_pg})
+    plans = []
+    for dataflow in DATAFLOWS:
+        for th in h_ticks:
+            for tc in c_ticks:
+                try:
+                    plan = ConvPlan.build(
+                        x_shape, w_shape, stride=stride, pad=pad,
+                        groups=groups, dtype_bytes=dtype_bytes,
+                        tile_h=th, tile_cout=tc, dataflow=dataflow)
+                except ValueError:
+                    continue
+                if plan.vmem_resident_bytes <= vmem_bytes:
+                    plans.append(plan)
+    return plans
+
+
+def _model_score(plan: ConvPlan) -> tuple:
+    """Deterministic comparison key: modeled step time, then total HBM
+    bytes, then prefer the order-independent halo grid on exact ties
+    (its axes parallelize; the model cannot see that), then fewer grid
+    steps."""
+    terms = conv_plan_roofline("tune", plan)
+    steps = plan.g_tiles * plan.co_tiles
+    return (terms.step_time_s, plan.hbm_bytes()["total"],
+            0 if plan.dataflow == "halo" else 1, steps, plan.tile_cout)
+
+
+def _as_record(plan: ConvPlan, *, source: str,
+               measured_us: float | None = None) -> dict:
+    return dict(tile_h=plan.tile_h, tile_cout=plan.tile_cout,
+                dataflow=plan.dataflow, source=source,
+                model_step_time_s=conv_plan_roofline("tune",
+                                                     plan).step_time_s,
+                measured_us=measured_us)
+
+
+def _measure_plan(plan: ConvPlan, *, stride, pad, groups,
+                  dtype: str = "float32", warmup: int = 1,
+                  iters: int = 2) -> float:
+    """Wall-clock the real kernel for one candidate (us per call)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.trim_conv2d import trim_conv2d
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((plan.n, plan.h, plan.w, plan.cin)),
+                    dt)
+    w = jnp.asarray(rng.standard_normal(
+        (plan.kh, plan.kw, plan.cin_per_group, plan.cout)) * 0.1, dt)
+
+    def call():
+        trim_conv2d(x, w, stride=stride, pad=pad, groups=groups,
+                    tile_h=plan.tile_h, tile_cout=plan.tile_cout,
+                    dataflow=plan.dataflow).block_until_ready()
+
+    for _ in range(warmup):
+        call()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        call()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def tune(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+         groups: int = 1, dtype: str = "float32", dtype_bytes: int = 4,
+         backend: str | None = None, measure: bool = False,
+         measure_top_k: int = 4, write: bool = True,
+         path: str | None = None) -> dict:
+    """Tune one conv problem and (by default) persist the winner.
+
+    Model-guided: candidates are ranked by the plan's analytical roofline
+    step time.  With ``measure=True`` the ``measure_top_k`` leaders are
+    wall-clocked through the actual kernel and the fastest wins — this is
+    how grid-step overheads the byte model cannot see (e.g. per-step
+    interpreter cost, pipeline ramp) get captured.
+    """
+    plans = candidate_knobs(x_shape, w_shape, stride=stride, pad=pad,
+                            groups=groups, dtype_bytes=dtype_bytes)
+    if not plans:
+        raise ValueError(f"no feasible candidates for {x_shape}/{w_shape}")
+    ranked = sorted(plans, key=_model_score)
+    if measure:
+        leaders = ranked[:measure_top_k]
+        timed = [(_measure_plan(p, stride=stride, pad=pad, groups=groups,
+                                dtype=dtype),
+                  i, p) for i, p in enumerate(leaders)]
+        us, _, best = min(timed)
+        record = _as_record(best, source="measured", measured_us=us)
+    else:
+        record = _as_record(ranked[0], source="model")
+    if write:
+        store(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                       groups=groups, dtype=dtype, backend=backend),
+              record, path)
+    return record

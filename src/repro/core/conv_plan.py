@@ -17,6 +17,22 @@ This module owns all of it (DESIGN.md §3):
   ``core/roofline.py`` and ``benchmarks/*`` read traffic and arithmetic
   intensity from the same object.
 
+  The plan carries a ``dataflow`` axis (DESIGN.md §4) selecting which of
+  the two schedules the kernel executes:
+
+  * ``"carry"`` — the paper's shadow registers: strips are
+    non-overlapping and the K-1 boundary rows ride in a VMEM scratch
+    across *sequential* grid steps.  Zero halo traffic
+    (``mode="3dtrim"`` accounting) but the (N, group, strip) axes must
+    execute in order.
+  * ``"halo"`` — TrIM-style over-fetch: every strip re-reads its K-1
+    predecessor rows through an overlapping BlockSpec.  Pays the
+    ``mode="trim"`` halo bytes but has no cross-step state, so every
+    grid axis is order-independent (parallelizable / reorderable).
+
+  The autotuner (``core/autotune.py``) picks the dataflow per layer from
+  exactly these numbers.
+
 * :class:`Conv1dPlan` — the 1D image of the same plan, consumed by
   ``kernels/trim_conv1d.py``.
 
@@ -92,9 +108,13 @@ class ConvPlan:
     dtype_bytes: int = 4
     tile_h: int = 8            # strip height in *input* rows
     tile_cout: int = 128       # C_out tile per grid step (per group)
+    dataflow: str = "carry"    # "carry" (shadow regs) | "halo" (over-fetch)
     vmem_budget: int = STRIP_VMEM_BUDGET
 
     def __post_init__(self):
+        if self.dataflow not in ("carry", "halo"):
+            raise ValueError(
+                f"dataflow={self.dataflow!r} must be 'carry' or 'halo'")
         if self.cin % self.groups or self.cout % self.groups:
             raise ValueError(
                 f"groups={self.groups} must divide cin={self.cin} and "
@@ -112,6 +132,7 @@ class ConvPlan:
     def build(cls, x_shape, w_shape, *, stride: int = 1, pad: int = 0,
               groups: int = 1, dtype_bytes: int = 4,
               tile_h: int | None = None, tile_cout: int | None = None,
+              dataflow: str = "carry",
               vmem_budget: int = STRIP_VMEM_BUDGET) -> "ConvPlan":
         """Plan from array shapes, auto-choosing tiles when not given.
 
@@ -138,11 +159,13 @@ class ConvPlan:
         return cls(n=n, h=h, w=w, cin=cin, cout=cout, kh=kh, kw=kw,
                    stride=s, pad=pad, groups=groups,
                    dtype_bytes=dtype_bytes, tile_h=tile_h,
-                   tile_cout=tile_cout, vmem_budget=vmem_budget)
+                   tile_cout=tile_cout, dataflow=dataflow,
+                   vmem_budget=vmem_budget)
 
     @classmethod
     def from_layer(cls, layer, *, n: int = 1, dtype_bytes: int = 4,
                    tile_h: int | None = None, tile_cout: int | None = None,
+                   dataflow: str = "carry",
                    vmem_budget: int = STRIP_VMEM_BUDGET) -> "ConvPlan":
         """Plan from a ``core.model.ConvLayer`` description (duck-typed)."""
         groups = getattr(layer, "groups", 1)
@@ -152,7 +175,7 @@ class ConvPlan:
              layer.out_channels),
             stride=layer.stride, pad=layer.padding, groups=groups,
             dtype_bytes=dtype_bytes, tile_h=tile_h, tile_cout=tile_cout,
-            vmem_budget=vmem_budget)
+            dataflow=dataflow, vmem_budget=vmem_budget)
 
     # -- problem geometry --------------------------------------------------
 
@@ -255,18 +278,43 @@ class ConvPlan:
     @property
     def carry_shape(self) -> tuple[int, int, int]:
         """Shadow-register scratch: the K-1 boundary rows carried across
-        strips (per group)."""
+        strips (per group).  Only allocated by the ``"carry"`` dataflow."""
         return (max(self.kh - 1, 1), self.wp, self.cin_per_group)
+
+    # -- halo dataflow layout (overlapping strips, no carry) ---------------
+
+    @property
+    def halo_in_block(self) -> tuple[int, int, int, int]:
+        """Input window of one halo grid step: the strip *plus* its K-1
+        predecessor rows, fetched through an overlapping BlockSpec."""
+        return (1, self.tile_h + self.kh - 1, self.wp, self.cin_per_group)
+
+    @property
+    def halo_padded_input_shape(self) -> tuple[int, int, int, int]:
+        """Padded input with K-1 extra zero rows on top so strip 0's
+        overlapping window starts at element row 0."""
+        return (self.n, self.kh - 1 + self.rows_padded, self.wp, self.cin)
 
     @property
     def vmem_resident_bytes(self) -> int:
-        """Resident set of one grid step (strip + carry + weights + acc)."""
+        """Resident set of one grid step (window + carry + weights + acc).
+
+        ``"carry"``: a ``tile_h`` strip plus the K-1 carry scratch.
+        ``"halo"``: one overlapping window of ``tile_h + K - 1`` rows, no
+        scratch — same working set to within one row (the ``max(K-1, 1)``
+        floor of the scratch allocation).
+        """
         db = self.dtype_bytes
-        strip = self.tile_h * self.wp * self.cin_per_group * db
-        carry = self.carry_shape[0] * self.wp * self.cin_per_group * db
+        if self.dataflow == "halo":
+            window = (self.tile_h + self.kh - 1) * self.wp \
+                * self.cin_per_group * db
+        else:
+            strip = self.tile_h * self.wp * self.cin_per_group * db
+            carry = self.carry_shape[0] * self.wp * self.cin_per_group * db
+            window = strip + carry
         wtile = self.kh * self.kw * self.cin_per_group * self.tile_cout * db
         acc = self.th_out * self.w_out * self.tile_cout * 4   # fp32
-        return strip + carry + wtile + acc
+        return window + wtile + acc
 
     # -- arithmetic --------------------------------------------------------
 
@@ -281,26 +329,36 @@ class ConvPlan:
 
     # -- analytical HBM traffic -------------------------------------------
 
-    def halo_rows(self, mode: str = "3dtrim") -> int:
+    @property
+    def traffic_mode(self) -> str:
+        """The accounting mode this plan's dataflow actually pays:
+        ``"carry"`` moves the ``"3dtrim"`` bytes, ``"halo"`` the
+        ``"trim"`` bytes."""
+        return "3dtrim" if self.dataflow == "carry" else "trim"
+
+    def halo_rows(self, mode: str | None = None) -> int:
         """Input rows re-fetched from HBM across one (N, group) sweep.
 
         ``"3dtrim"``: the K-1 boundary rows live in the VMEM carry scratch
         — zero halo.  ``"trim"``: every strip after the first re-fetches
         its K-1 predecessor rows, the overhead of Fig. 1 at strip level.
+        ``None`` uses the plan's own ``dataflow`` accounting.
         """
+        mode = self.traffic_mode if mode is None else mode
         if mode == "3dtrim":
             return 0
         if mode == "trim":
             return (self.g_tiles - 1) * (self.kh - 1)
         raise ValueError(f"unknown mode {mode!r}")
 
-    def hbm_bytes(self, mode: str = "3dtrim") -> dict:
+    def hbm_bytes(self, mode: str | None = None) -> dict:
         """Analytical HBM bytes moved by the kernel's schedule.
 
         ``input`` in ``"3dtrim"`` mode equals exactly the padded-input
         array size (each strip fetched once, shared by all C_out tiles);
         ``weights`` are re-streamed once per strip; ``output`` counts the
-        useful (un-padded) result.
+        useful (un-padded) result.  ``mode=None`` accounts the plan's own
+        ``dataflow`` (carry -> "3dtrim", halo -> "trim").
         """
         db = self.dtype_bytes
         halo = self.halo_rows(mode)
@@ -313,14 +371,16 @@ class ConvPlan:
                     total=in_bytes + w_bytes + out_bytes,
                     overhead_pct=100.0 * halo / max(self.rows_padded, 1))
 
-    def arithmetic_intensity(self, mode: str = "3dtrim") -> float:
-        """FLOPs per HBM byte — the roofline x-coordinate."""
+    def arithmetic_intensity(self, mode: str | None = None) -> float:
+        """FLOPs per HBM byte — the roofline x-coordinate.  ``mode=None``
+        uses the plan's own ``dataflow`` accounting."""
         return self.flops / max(self.hbm_bytes(mode)["total"], 1)
 
     def as_dict(self) -> dict:
-        t = self.hbm_bytes("3dtrim")
+        t = self.hbm_bytes()
         return dict(grid=self.grid, tile_h=self.tile_h,
-                    tile_cout=self.tile_cout, th_out=self.th_out,
+                    tile_cout=self.tile_cout, dataflow=self.dataflow,
+                    th_out=self.th_out,
                     g_tiles=self.g_tiles, co_tiles=self.co_tiles,
                     carry_shape=self.carry_shape,
                     vmem_resident_bytes=self.vmem_resident_bytes,

@@ -69,11 +69,13 @@ class ConvLayer:
 
     def plan(self, *, n: int = 1, dtype_bytes: int = 4,
              tile_h: int | None = None,
-             tile_cout: int | None = None) -> ConvPlan:
+             tile_cout: int | None = None,
+             dataflow: str = "carry") -> ConvPlan:
         """The TPU-kernel ``ConvPlan`` for this layer — same object the
         Pallas kernel executes and the roofline/benchmarks read."""
         return ConvPlan.from_layer(self, n=n, dtype_bytes=dtype_bytes,
-                                   tile_h=tile_h, tile_cout=tile_cout)
+                                   tile_h=tile_h, tile_cout=tile_cout,
+                                   dataflow=dataflow)
 
 
 @dataclass(frozen=True)

@@ -208,11 +208,12 @@ def analyze_compiled(cell: str, compiled, n_devices: int,
     )
 
 
-def conv_plan_roofline(cell: str, plan, mode: str = "3dtrim"
+def conv_plan_roofline(cell: str, plan, mode: str | None = None
                        ) -> RooflineTerms:
     """Roofline terms for one conv layer, read straight from its
     ``ConvPlan`` — the same object the Pallas kernel executes, so the
-    hillclimb's T_mem uses exactly the kernel's strip/carry traffic."""
+    hillclimb's T_mem uses exactly the kernel's strip/carry traffic.
+    ``mode=None`` accounts the plan's own ``dataflow``."""
     traffic = plan.hbm_bytes(mode)
     return RooflineTerms(
         cell=cell,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 _NEG_INF = -1e30
 
 
@@ -76,8 +78,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, soft_cap: float | None = None,
                     window: int | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
-    """q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D) -> (B, Lq, Hq, D)."""
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D) -> (B, Lq, Hq, D).
+    ``interpret=None`` auto-detects the backend (native on TPU)."""
+    interpret = resolve_interpret(interpret)
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
     group = hq // hkv

@@ -15,16 +15,26 @@ Every op takes ``impl``:
 ``conv2d`` applies the paper's §III kernel tiling for K > MAX_NATIVE_K:
 the kernel is decomposed into 3x3-ish sub-kernels whose partial outputs
 are accumulated — the adder-tree path.
+
+``conv2d`` consults the autotune cache (``core/autotune.py``) by default:
+any ``tile_h`` / ``tile_cout`` / ``dataflow`` knob the caller leaves unset
+is filled from the persisted per-(shape, dtype, backend) record when one
+exists.  ``pack_conv2d_weights`` performs the kernel's weight pad/reshape
+once at load time; passing the resulting :class:`PackedConv2dWeights` as
+``w`` skips the per-call packing in the hot path entirely.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
+from repro.core.conv_plan import ConvPlan
 from repro.core.tiling import subkernel_decomposition
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -45,16 +55,129 @@ def _same_pads(size: int, k: int, s: int) -> tuple[int, int]:
     return total // 2, total - total // 2
 
 
-def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedConv2dWeights:
+    """Conv weights pre-packed into the kernel's padded HBM layout.
+
+    ``w`` is ``ConvPlan.padded_weight_shape`` for the frozen
+    ``(groups, tile_cout)``; ``bias`` (optional) is the padded
+    ``(1, groups * cout_padded_per_group)`` row the kernel streams
+    per C_out tile.  ``tile_h`` / ``dataflow`` are optional tuned hints
+    (e.g. from the autotune cache at pack time) applied when the call
+    site doesn't override them.  Registered as a pytree (arrays are
+    leaves, knobs are static) so packed params live in checkpointed /
+    jitted parameter trees like any other weight.
+    """
+
+    w: jax.Array
+    bias: jax.Array | None
+    cout: int
+    groups: int
+    tile_cout: int
+    tile_h: int | None = None
+    dataflow: str | None = None
+
+    def tree_flatten(self):
+        return ((self.w, self.bias),
+                (self.cout, self.groups, self.tile_cout, self.tile_h,
+                 self.dataflow))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
+                        groups: int = 1, tile_cout: int | None = None,
+                        tile_h: int | None = None,
+                        dataflow: str | None = None,
+                        x_shape=None, stride: int = 1,
+                        padding: str = "same",
+                        dtype: str = "float32") -> PackedConv2dWeights:
+    """Pad/reshape conv weights to the kernel layout once, at load time.
+
+    w: (K, K, Cin/groups, Cout); bias: (Cout,) or None.  The packed
+    layout is fixed by ``(groups, tile_cout)``; ``tile_cout`` defaults to
+    the plan's MXU-friendly choice.  When ``x_shape`` is given and knobs
+    are unset, the autotune cache is consulted (same key ``conv2d`` would
+    use for that input) so the packed layout matches the tuned plan.
+    """
+    kh, kw, cin_pg, cout = w.shape
+    if kh > MAX_NATIVE_K:
+        raise ValueError(
+            f"K={kh} > {MAX_NATIVE_K}: the kernel-tiled path re-slices "
+            "weights per sub-kernel and cannot consume packed weights")
+    if cout % groups:
+        raise ValueError(f"groups={groups} must divide cout={cout}")
+    if x_shape is not None and (tile_cout is None or tile_h is None
+                                or dataflow is None):
+        xs, pad = kernel_input_shape(x_shape, kh, stride, padding)
+        rec = autotune.knobs_for(xs, w.shape, stride=stride, pad=pad,
+                                 groups=groups, dtype=dtype)
+        if rec is not None:
+            tile_cout = tile_cout if tile_cout is not None \
+                else rec["tile_cout"]
+            tile_h = tile_h if tile_h is not None else rec["tile_h"]
+            dataflow = dataflow if dataflow is not None else rec["dataflow"]
+    # the padded layout is the plan's, not a re-derivation (the spatial
+    # dims are irrelevant to the weight layout — any kernel-sized input
+    # yields the same padded_weight_shape)
+    plan = ConvPlan.build((1, kh, kw, cin_pg * groups), w.shape,
+                          groups=groups, tile_cout=tile_cout)
+    tile_cout, cpp = plan.tile_cout, plan.cout_padded_per_group
+    cout_pg = plan.cout_per_group
+    wk = w.reshape(kh, kw, cin_pg, groups, cout_pg)
+    wk = jnp.pad(wk, ((0, 0),) * 4 + ((0, cpp - cout_pg),))
+    wk = wk.reshape(plan.padded_weight_shape)
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.reshape(groups, cout_pg),
+                     ((0, 0), (0, cpp - cout_pg))).reshape(1, groups * cpp)
+    return PackedConv2dWeights(w=wk, bias=bp, cout=cout, groups=groups,
+                               tile_cout=tile_cout, tile_h=tile_h,
+                               dataflow=dataflow)
+
+
+def kernel_input_shape(x_shape, k: int, stride: int, padding: str):
+    """(shape, residual_pad) the Pallas kernel actually sees: 'same'
+    pre-pads in HBM (possibly asymmetric for stride > 1) and calls the
+    kernel with pad=0.  This is the shape autotune cache keys are built
+    over (used by ``benchmarks/hillclimb.py --write-cache``)."""
+    n, h, w, cin = x_shape
+    if padding == "same":
+        ph, pw = _same_pads(h, k, stride), _same_pads(w, k, stride)
+        return (n, h + sum(ph), w + sum(pw), cin), 0
+    return (n, h, w, cin), 0
+
+
+def conv2d(x: jax.Array, w, *, stride: int = 1,
            padding: str = "same", impl: str = "pallas",
            feature_group_count: int = 1, bias: jax.Array | None = None,
-           activation: str | None = None) -> jax.Array:
+           activation: str | None = None,
+           tile_h: int | None = None, tile_cout: int | None = None,
+           dataflow: str | None = None,
+           use_autotune_cache: bool = True) -> jax.Array:
     """(Grouped) 2D convolution with optional fused bias + activation.
 
-    x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout); bias: (Cout,) or None;
+    x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout) or a
+    :class:`PackedConv2dWeights`; bias: (Cout,) or None;
     ``feature_group_count=Cin`` gives depthwise convolution.  The Pallas
     path fuses the epilogue into the kernel's accumulator store.
+
+    Tile/dataflow knobs left as ``None`` are filled from the autotune
+    cache (``core/autotune.py``) when a record exists for this problem
+    (disable with ``use_autotune_cache=False`` or
+    ``REPRO_CONV_AUTOTUNE=0``), falling back to the plan defaults.  The
+    K > MAX_NATIVE_K kernel-tiled path honors explicit knobs on every
+    sub-kernel but never consults the cache (records describe the full-K
+    problem, not the sub-kernel geometry).
     """
+    if isinstance(w, PackedConv2dWeights):
+        return _conv2d_packed(x, w, stride=stride, padding=padding,
+                              impl=impl, bias=bias, activation=activation,
+                              tile_h=tile_h, dataflow=dataflow,
+                              use_autotune_cache=use_autotune_cache)
     if impl == "ref":
         return ref.conv2d(x, w, stride=stride, padding=padding,
                           feature_group_count=feature_group_count,
@@ -65,11 +188,27 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
             _same_pads(x.shape[2], k, stride)
         x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
     if k <= MAX_NATIVE_K:
+        if use_autotune_cache and (tile_h is None or tile_cout is None
+                                   or dataflow is None):
+            rec = autotune.knobs_for(x.shape, w.shape, stride=stride,
+                                     pad=0, groups=feature_group_count,
+                                     dtype=str(x.dtype))
+            if rec is not None:
+                tile_h = tile_h if tile_h is not None else rec["tile_h"]
+                tile_cout = tile_cout if tile_cout is not None \
+                    else rec["tile_cout"]
+                dataflow = dataflow if dataflow is not None \
+                    else rec["dataflow"]
         return trim_conv2d(x, w, bias, stride=stride, pad=0,
+                           tile_h=tile_h, tile_cout=tile_cout,
                            groups=feature_group_count,
-                           activation=activation)
+                           activation=activation,
+                           dataflow=dataflow or "carry")
     # Kernel tiling (paper §III): split K x K into sub-kernels, accumulate.
-    # The epilogue is applied once, after the adder tree.
+    # The epilogue is applied once, after the adder tree.  Explicit tile
+    # knobs apply to every sub-kernel; the autotune cache is NOT consulted
+    # here (its records describe the full-K problem, not the sub-kernel
+    # geometry).
     h_out = (x.shape[1] - k) // stride + 1
     w_out = (x.shape[2] - k) // stride + 1
     out = None
@@ -77,9 +216,47 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
         zs = x[:, r0:r0 + (h_out - 1) * stride + kh,
                c0:c0 + (w_out - 1) * stride + kw, :]
         part = trim_conv2d(zs, w[r0:r0 + kh, c0:c0 + kw], stride=stride,
-                           pad=0, groups=feature_group_count)
+                           pad=0, tile_h=tile_h, tile_cout=tile_cout,
+                           groups=feature_group_count,
+                           dataflow=dataflow or "carry")
         out = part if out is None else out + part   # adder tree
     return ref.epilogue(out, bias, activation)
+
+
+def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
+                   stride: int, padding: str, impl: str,
+                   bias: jax.Array | None, activation: str | None,
+                   tile_h: int | None, dataflow: str | None,
+                   use_autotune_cache: bool) -> jax.Array:
+    """The pre-packed fast path: no per-call weight pad/reshape."""
+    if bias is not None:
+        raise ValueError("bias is packed inside PackedConv2dWeights; "
+                         "pass it to pack_conv2d_weights instead")
+    if impl != "pallas":
+        raise ValueError(f"packed weights require impl='pallas', "
+                         f"got {impl!r}")
+    k = pk.w.shape[0]
+    if padding == "same":
+        ph, pw = _same_pads(x.shape[1], k, stride), \
+            _same_pads(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    tile_h = tile_h if tile_h is not None else pk.tile_h
+    dataflow = dataflow if dataflow is not None else pk.dataflow
+    if use_autotune_cache and (tile_h is None or dataflow is None):
+        # the packed layout freezes tile_cout; tile_h/dataflow may still
+        # come from the cache (logical weight shape keys the record)
+        w_shape = (k, pk.w.shape[1], pk.w.shape[2], pk.cout)
+        rec = autotune.knobs_for(x.shape, w_shape, stride=stride, pad=0,
+                                 groups=pk.groups, dtype=str(x.dtype))
+        if rec is not None and rec["tile_cout"] == pk.tile_cout:
+            tile_h = tile_h if tile_h is not None else rec["tile_h"]
+            dataflow = dataflow if dataflow is not None \
+                else rec["dataflow"]
+    return trim_conv2d(x, pk.w, pk.bias, stride=stride, pad=0,
+                       tile_h=tile_h, tile_cout=pk.tile_cout,
+                       groups=pk.groups, activation=activation,
+                       dataflow=dataflow or "carry",
+                       packed_cout=pk.cout)
 
 
 def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,

@@ -1,0 +1,23 @@
+"""Backend-dependent kernel runtime switches.
+
+The Pallas kernels take ``interpret=None`` by default and resolve it here:
+interpret mode everywhere *except* a real TPU backend, where the same call
+site lowers natively.  Tests can still force ``interpret=True/False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU (fixed per process)."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` auto-detects: native lowering on TPU, interpreter off-TPU."""
+    return (not on_tpu()) if interpret is None else interpret

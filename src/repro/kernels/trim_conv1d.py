@@ -23,6 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_plan import Conv1dPlan
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(x_ref, w_ref, o_ref, carry_ref, *, k: int, tl: int):
@@ -42,10 +43,12 @@ def _kernel(x_ref, w_ref, o_ref, carry_ref, *, k: int, tl: int):
 
 @functools.partial(jax.jit, static_argnames=("tile_l", "tile_d", "interpret"))
 def trim_conv1d(x: jax.Array, w: jax.Array, *, tile_l: int | None = None,
-                tile_d: int | None = None, interpret: bool = True
+                tile_d: int | None = None, interpret: bool | None = None
                 ) -> jax.Array:
-    """Causal depthwise conv1d.  x: (B, L, D); w: (K, D) -> (B, L, D)."""
+    """Causal depthwise conv1d.  x: (B, L, D); w: (K, D) -> (B, L, D).
+    ``interpret=None`` auto-detects the backend (native on TPU)."""
     assert w.shape[0] >= 2
+    interpret = resolve_interpret(interpret)
     plan = Conv1dPlan.build(x.shape, w.shape, dtype_bytes=x.dtype.itemsize,
                             tile_l=tile_l, tile_d=tile_d)
     xp = jnp.pad(x, ((0, 0), (0, plan.length_padded - plan.length), (0, 0)))

@@ -1,6 +1,6 @@
 """3D-TrIM convolution as a TPU Pallas kernel.
 
-TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
+TPU-native re-expression of the paper's dataflow (DESIGN.md §2, §4):
 
 * **Input-stationary strips.**  The padded ifmap is tiled into
   non-overlapping strips of ``TH`` rows.  A strip is fetched from HBM
@@ -9,11 +9,16 @@ TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
   BlockSpec index map *ignoring the cout axis*, which is the BlockSpec
   image of the paper's P_O slices sharing one Input Recycling Buffer.
 
-* **Shadow-register carry.**  The ``K-1`` boundary rows a strip needs from
-  its predecessor are *not* re-fetched from HBM (that would be TrIM's
-  end-of-row overhead).  They are carried across sequential grid steps in
-  a VMEM scratch buffer (``carry_ref``) — the exact role the paper's
-  shadow registers play at the register level.
+* **Two dataflows for the strip boundary** (``dataflow=`` knob, DESIGN.md
+  §4).  ``"carry"`` is the paper's shadow registers: the ``K-1`` boundary
+  rows a strip needs from its predecessor ride across *sequential* grid
+  steps in a VMEM scratch (``carry_ref``) — zero halo traffic, serialized
+  strips.  ``"halo"`` is the TrIM baseline re-expressed at strip level:
+  every strip over-fetches its ``K-1`` predecessor rows through an
+  overlapping (unblocked) BlockSpec — it pays the halo bytes the shadow
+  registers eliminate, but has no cross-step state, so batch / group /
+  strip / cout grid axes can execute in any order (parallelizable).  The
+  autotuner (``core/autotune.py``) picks per layer.
 
 * **Weight-stationary MXU taps.**  The K x K spatial taps are unrolled into
   K^2 dense matmuls ``(TH_out * W_out, Cin) x (Cin, TCout)`` against the
@@ -30,11 +35,18 @@ TPU-native re-expression of the paper's dataflow (DESIGN.md §2):
   each group sweeps its own channel slice with its own carry, covering the
   MobileNet-style depthwise workloads of the paper's OPs/Access study.
 
-All geometry (strips, carry, grid, padded layouts) comes from
-``core.conv_plan.ConvPlan`` — the same object that produces the analytical
-HBM traffic numbers, so the kernel and the model cannot disagree.
-Supports arbitrary K and stride (kernel tiling for huge K is provided by
-``ops.conv2d``); validated in interpret mode against ``ref.conv2d``.
+* **Pre-packed weights.**  ``packed_cout`` signals that ``w`` (and
+  ``bias``) already sit in the plan's padded layouts
+  (``ops.pack_conv2d_weights``), so the per-call pad/reshape in the hot
+  path is skipped — the load-time packing of ``models/layers.py``.
+
+All geometry (strips, carry, halo windows, grid, padded layouts) comes
+from ``core.conv_plan.ConvPlan`` — the same object that produces the
+analytical HBM traffic numbers, so the kernel and the model cannot
+disagree.  Supports arbitrary K and stride (kernel tiling for huge K is
+provided by ``ops.conv2d``); validated in interpret mode against
+``ref.conv2d``.  ``interpret=None`` auto-detects the backend: the same
+call site lowers natively on a real TPU and interprets elsewhere.
 """
 
 from __future__ import annotations
@@ -47,6 +59,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv_plan import ConvPlan
+from repro.kernels.runtime import resolve_interpret
 
 ACTIVATIONS = {
     None: lambda a: a,
@@ -56,18 +69,47 @@ ACTIVATIONS = {
 }
 
 
-def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int, th_out: int,
-            w_out: int, n_cout_tiles: int, activation: str | None,
-            has_bias: bool):
-    """One grid step: strip ``g`` of (image ``n``, group) x cout tile."""
+def _tap_matmuls(window, w_ref, *, kh: int, kw: int, stride: int,
+                 th_out: int, w_out: int, n_out: int):
+    """The K x K taps: triangular movement as K^2 shifted views of the
+    resident window, each a dense MXU matmul.  ``window`` holds the strip
+    plus its K-1 predecessor rows (from the carry scratch or the halo
+    over-fetch — identical contents either way)."""
+    s = stride
+    r = (kh - 1) % s  # static in-window row offset (ConvPlan.row_offset)
+    cin = window.shape[-1]
+    acc = jnp.zeros((th_out * w_out, n_out), jnp.float32)
+    for ki in range(kh):
+        for kj in range(kw):
+            rows = window[ki + r: ki + r + (th_out - 1) * s + 1: s,
+                          kj: kj + (w_out - 1) * s + 1: s, :]
+            acc += jnp.dot(rows.reshape(th_out * w_out, cin),
+                           w_ref[ki, kj],
+                           preferred_element_type=jnp.float32)
+    return acc
+
+
+def _epilogue_store(acc, b_ref, o_ref, *, th_out: int, w_out: int,
+                    activation: str | None):
+    """Fused epilogue: bias + activation on the fp32 accumulator, then the
+    single store to the output block."""
+    if b_ref is not None:
+        acc = acc + b_ref[0].astype(jnp.float32)
+    acc = ACTIVATIONS[activation](acc)
+    o_ref[0] = acc.reshape(th_out, w_out, -1).astype(o_ref.dtype)
+
+
+def _carry_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
+                  th_out: int, w_out: int, n_cout_tiles: int,
+                  activation: str | None, has_bias: bool):
+    """One grid step: strip ``g`` of (image ``n``, group) x cout tile,
+    with the K-1 boundary rows carried across sequential strips."""
     if has_bias:
         b_ref, o_ref, carry_ref = rest
     else:
         b_ref, (o_ref, carry_ref) = None, rest
     g = pl.program_id(2)
     co = pl.program_id(3)
-    s = stride
-    r = (kh - 1) % s  # static in-window row offset (ConvPlan.row_offset)
 
     if kh > 1:
         @pl.when(jnp.logical_and(g == 0, co == 0))
@@ -80,20 +122,10 @@ def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int, th_out: int,
     else:
         window = x_ref[0]
 
-    cin = window.shape[-1]
-    acc = jnp.zeros((th_out * w_out, o_ref.shape[-1]), jnp.float32)
-    for ki in range(kh):       # the K x K taps: triangular movement as
-        for kj in range(kw):   # K^2 shifted views of the resident window
-            rows = window[ki + r: ki + r + (th_out - 1) * s + 1: s,
-                          kj: kj + (w_out - 1) * s + 1: s, :]
-            acc += jnp.dot(rows.reshape(th_out * w_out, cin),
-                           w_ref[ki, kj],
-                           preferred_element_type=jnp.float32)
-    # fused epilogue: bias + activation on the fp32 accumulator
-    if has_bias:
-        acc = acc + b_ref[0].astype(jnp.float32)
-    acc = ACTIVATIONS[activation](acc)
-    o_ref[0] = acc.reshape(th_out, w_out, -1).astype(o_ref.dtype)
+    acc = _tap_matmuls(window, w_ref, kh=kh, kw=kw, stride=stride,
+                       th_out=th_out, w_out=w_out, n_out=o_ref.shape[-1])
+    _epilogue_store(acc, b_ref, o_ref, th_out=th_out, w_out=w_out,
+                    activation=activation)
 
     if kh > 1:
         @pl.when(co == n_cout_tiles - 1)
@@ -102,37 +134,76 @@ def _kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int, th_out: int,
             carry_ref[...] = window[-(kh - 1):]
 
 
+def _halo_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
+                 th_out: int, w_out: int, activation: str | None,
+                 has_bias: bool):
+    """One grid step of the halo dataflow: the overlapping input window
+    already contains the K-1 predecessor rows — no scratch, no cross-step
+    dependency, any grid order."""
+    if has_bias:
+        b_ref, (o_ref,) = rest[0], rest[1:]
+    else:
+        b_ref, (o_ref,) = None, rest
+    acc = _tap_matmuls(x_ref[0], w_ref, kh=kh, kw=kw, stride=stride,
+                       th_out=th_out, w_out=w_out, n_out=o_ref.shape[-1])
+    _epilogue_store(acc, b_ref, o_ref, th_out=th_out, w_out=w_out,
+                    activation=activation)
+
+
 def make_plan(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
               groups: int = 1, dtype_bytes: int = 4,
               tile_h: int | None = None,
-              tile_cout: int | None = None) -> ConvPlan:
+              tile_cout: int | None = None,
+              dataflow: str = "carry") -> ConvPlan:
     """The exact plan :func:`trim_conv2d` executes for these arguments."""
     return ConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
                           groups=groups, dtype_bytes=dtype_bytes,
-                          tile_h=tile_h, tile_cout=tile_cout)
+                          tile_h=tile_h, tile_cout=tile_cout,
+                          dataflow=dataflow)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "stride", "pad", "tile_h", "tile_cout", "groups", "activation",
-    "interpret"))
+    "dataflow", "packed_cout", "interpret"))
 def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
                 *, stride: int = 1, pad: int = 0, tile_h: int | None = None,
                 tile_cout: int | None = None, groups: int = 1,
                 activation: str | None = None,
-                interpret: bool = True) -> jax.Array:
+                dataflow: str = "carry",
+                packed_cout: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
     """Strided (grouped) 2D convolution with fused bias + activation.
 
     x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout); bias: (Cout,) or None.
     ``pad`` is symmetric zero padding (use ``(K-1)//2`` for 'same');
-    ``activation`` is one of ``None | "relu" | "gelu" | "silu"``.
+    ``activation`` is one of ``None | "relu" | "gelu" | "silu"``;
+    ``dataflow`` selects the strip-boundary schedule (DESIGN.md §4):
+    ``"carry"`` (shadow-register scratch, serialized strips, zero halo) or
+    ``"halo"`` (overlapping strip fetch, order-independent grid).
+
+    ``packed_cout``: when not None, ``w`` is already in the plan's
+    ``padded_weight_shape`` (and ``bias``, if given, in the padded
+    ``(1, groups * cout_padded)`` layout) as produced by
+    ``ops.pack_conv2d_weights`` with the same ``tile_cout``;
+    ``packed_cout`` is the *logical* C_out the caller gets back.
+
+    ``interpret=None`` auto-detects the backend (native on TPU).
     Returns (N, H_out, W_out, Cout).
     """
     if activation not in ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}; "
                          f"choose from {sorted(ACTIVATIONS, key=str)}")
-    plan = make_plan(x.shape, w.shape, stride=stride, pad=pad, groups=groups,
-                     dtype_bytes=x.dtype.itemsize, tile_h=tile_h,
-                     tile_cout=tile_cout)
+    interpret = resolve_interpret(interpret)
+    if packed_cout is None:
+        w_shape = w.shape
+    else:
+        if tile_cout is None:
+            raise ValueError("packed weights require the tile_cout they "
+                             "were packed for")
+        w_shape = (w.shape[0], w.shape[1], w.shape[2], packed_cout)
+    plan = make_plan(x.shape, w_shape, stride=stride, pad=pad,
+                     groups=groups, dtype_bytes=x.dtype.itemsize,
+                     tile_h=tile_h, tile_cout=tile_cout, dataflow=dataflow)
 
     # --- layout: pad once in HBM, tile into non-overlapping strips ---------
     z = jnp.pad(x, ((0, 0), (pad, max(plan.pad_bottom, 0)), (pad, pad),
@@ -143,41 +214,86 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     assert plan.wp >= (plan.w_out - 1) * plan.stride + plan.kw
 
     cpp, cout_pg = plan.cout_padded_per_group, plan.cout_per_group
-    wk = w.reshape(plan.kh, plan.kw, plan.cin_per_group, groups, cout_pg)
-    wk = jnp.pad(wk, ((0, 0),) * 4 + ((0, cpp - cout_pg),))
-    wk = wk.reshape(plan.padded_weight_shape)
+    if packed_cout is None:
+        wk = w.reshape(plan.kh, plan.kw, plan.cin_per_group, groups,
+                       cout_pg)
+        wk = jnp.pad(wk, ((0, 0),) * 4 + ((0, cpp - cout_pg),))
+        wk = wk.reshape(plan.padded_weight_shape)
+    else:
+        assert w.shape == plan.padded_weight_shape, \
+            (w.shape, plan.padded_weight_shape)
+        wk = w
 
     co_tiles = plan.co_tiles
-    in_specs = [
-        # fresh strip: index map ignores `co` -> fetched once per strip,
-        # shared by every cout tile (IRB sharing); one channel slice per
-        # group
-        pl.BlockSpec(plan.in_block, lambda ni, gr, g, co: (ni, g, 0, gr)),
-        # stationary weight tile of this group's cout block
-        pl.BlockSpec(plan.w_block,
-                     lambda ni, gr, g, co: (0, 0, 0, gr * co_tiles + co)),
-    ]
+    if plan.dataflow == "halo":
+        # Overlapping strip windows (unblocked indexing, element offsets):
+        # strip g reads rows [g*TH, g*TH + TH + K-1) of the halo-padded
+        # input, whose K-1 extra top zero rows are this strip-level image
+        # of TrIM's re-fetched boundary — the halo bytes ConvPlan bills as
+        # mode="trim".
+        z = jnp.pad(z, ((0, 0), (plan.kh - 1, 0), (0, 0), (0, 0)))
+        assert z.shape == plan.halo_padded_input_shape
+        th, cin_pg = plan.tile_h, plan.cin_per_group
+        in_specs = [
+            pl.BlockSpec(plan.halo_in_block,
+                         lambda ni, gr, g, co: (ni, g * th, 0, gr * cin_pg),
+                         indexing_mode=pl.unblocked),
+        ]
+        kernel = functools.partial(
+            _halo_kernel, kh=plan.kh, kw=plan.kw, stride=plan.stride,
+            th_out=plan.th_out, w_out=plan.w_out, activation=activation,
+            has_bias=bias is not None)
+        scratch_shapes = []
+    else:
+        in_specs = [
+            # fresh strip: index map ignores `co` -> fetched once per
+            # strip, shared by every cout tile (IRB sharing); one channel
+            # slice per group
+            pl.BlockSpec(plan.in_block,
+                         lambda ni, gr, g, co: (ni, g, 0, gr)),
+        ]
+        kernel = functools.partial(
+            _carry_kernel, kh=plan.kh, kw=plan.kw, stride=plan.stride,
+            th_out=plan.th_out, w_out=plan.w_out, n_cout_tiles=co_tiles,
+            activation=activation, has_bias=bias is not None)
+        scratch_shapes = [pltpu.VMEM(plan.carry_shape, x.dtype)]
+
+    # stationary weight tile of this group's cout block
+    in_specs.append(pl.BlockSpec(
+        plan.w_block, lambda ni, gr, g, co: (0, 0, 0, gr * co_tiles + co)))
     inputs = [z, wk]
     if bias is not None:
-        bp = jnp.pad(bias.reshape(groups, cout_pg),
-                     ((0, 0), (0, cpp - cout_pg)))
-        inputs.append(bp.reshape(1, groups * cpp))
+        if packed_cout is None:
+            bp = jnp.pad(bias.reshape(groups, cout_pg),
+                         ((0, 0), (0, cpp - cout_pg)))
+            bp = bp.reshape(1, groups * cpp)
+        else:
+            assert bias.shape == (1, groups * cpp), bias.shape
+            bp = bias
+        inputs.append(bp)
         in_specs.append(pl.BlockSpec(
             (1, plan.tile_cout),
             lambda ni, gr, g, co: (0, gr * co_tiles + co)))
 
+    compiler_params = None
+    if not interpret:
+        # carry: every axis is "arbitrary" (the scratch serializes the
+        # sweep); halo: no cross-step state, all axes parallelizable.
+        semantics = ("parallel",) * 4 if plan.dataflow == "halo" \
+            else ("arbitrary",) * 4
+        compiler_params = pltpu.TPUCompilerParams(
+            dimension_semantics=semantics)
+
     out_padded = pl.pallas_call(
-        functools.partial(_kernel, kh=plan.kh, kw=plan.kw,
-                          stride=plan.stride, th_out=plan.th_out,
-                          w_out=plan.w_out, n_cout_tiles=co_tiles,
-                          activation=activation, has_bias=bias is not None),
+        kernel,
         grid=plan.grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
             plan.out_block,
             lambda ni, gr, g, co: (ni, g, 0, gr * co_tiles + co)),
         out_shape=jax.ShapeDtypeStruct(plan.padded_output_shape, x.dtype),
-        scratch_shapes=[pltpu.VMEM(plan.carry_shape, x.dtype)],
+        scratch_shapes=scratch_shapes,
+        compiler_params=compiler_params,
         interpret=interpret,
     )(*inputs)
 
@@ -196,7 +312,8 @@ def hbm_traffic_model(n, h, width, cin, cout, k, stride=1, pad=0,
     ``ConvPlan.hbm_bytes`` kept for API compatibility.
 
     ``mode='trim'`` models strips that re-fetch their K-1 halo rows from
-    HBM (no carry scratch) — the overhead the shadow registers eliminate.
+    HBM (no carry scratch) — the overhead the shadow registers eliminate,
+    i.e. exactly what the ``dataflow="halo"`` kernel pays.
     """
     plan = ConvPlan(n=n, h=h, w=width, cin=cin, cout=cout, kh=k, kw=k,
                     stride=stride, pad=pad, dtype_bytes=dtype_bytes,

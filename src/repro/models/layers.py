@@ -162,10 +162,36 @@ def conv2d_apply(p: dict, x: jax.Array, *, stride: int = 1,
                  activation: str | None = "relu",
                  impl: str = "pallas") -> jax.Array:
     """One conv layer with the bias + activation epilogue fused into the
-    Pallas kernel (single HBM round-trip for the output)."""
+    Pallas kernel (single HBM round-trip for the output).  Accepts either
+    raw params (``{"w", "b"}``) or a tree packed by
+    :func:`conv2d_pack_params` (``{"packed"}``) — the packed form skips
+    the per-call weight pad/reshape."""
+    if "packed" in p:
+        return ops.conv2d(x, p["packed"], stride=stride, padding=padding,
+                          impl=impl, activation=activation)
     return ops.conv2d(x, p["w"], stride=stride, padding=padding, impl=impl,
                       feature_group_count=groups, bias=p.get("b"),
                       activation=activation)
+
+
+def conv2d_pack_params(p: dict, *, groups: int = 1,
+                       tile_cout: int | None = None,
+                       tile_h: int | None = None,
+                       dataflow: str | None = None,
+                       x_shape=None, stride: int = 1,
+                       padding: str = "same") -> dict:
+    """Pack one conv layer's materialized params at load time.
+
+    Performs the pad/reshape to the kernel's ``padded_weight_shape`` (and
+    the padded bias row) exactly once; the returned tree is consumed
+    transparently by :func:`conv2d_apply`.  With ``x_shape`` given, the
+    autotune cache fills any unset tile/dataflow knob so the forward pass
+    runs entirely on cached plans.
+    """
+    return {"packed": ops.pack_conv2d_weights(
+        p["w"], p.get("b"), groups=groups, tile_cout=tile_cout,
+        tile_h=tile_h, dataflow=dataflow, x_shape=x_shape, stride=stride,
+        padding=padding)}
 
 
 def depthwise_separable_params(k: int, cin: int, cout: int,
@@ -173,6 +199,19 @@ def depthwise_separable_params(k: int, cin: int, cout: int,
     """MobileNet-style depthwise 3x3 + pointwise 1x1 block."""
     return {"dw": conv2d_params(k, cin, cin, groups=cin, bias=bias),
             "pw": conv2d_params(1, cin, cout, bias=bias)}
+
+
+def depthwise_separable_pack_params(p: dict, *, x_shape=None,
+                                    stride: int = 1) -> dict:
+    """Load-time packing of a depthwise-separable block (both convs)."""
+    cin = p["dw"]["w"].shape[3]
+    dw_shape = pw_shape = x_shape
+    if x_shape is not None and stride != 1:
+        n, h, w, _ = x_shape
+        pw_shape = (n, -(-h // stride), -(-w // stride), cin)
+    return {"dw": conv2d_pack_params(p["dw"], groups=cin, x_shape=dw_shape,
+                                     stride=stride),
+            "pw": conv2d_pack_params(p["pw"], x_shape=pw_shape)}
 
 
 def depthwise_separable_apply(p: dict, x: jax.Array, *, stride: int = 1,

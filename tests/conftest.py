@@ -2,9 +2,24 @@ import os
 import sys
 import types
 
+import pytest
+
 # smoke tests and benches see the single real CPU device (the dry-run sets
 # its own 512-device flag in its own process)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_convtune_cache(tmp_path, monkeypatch):
+    """Point the conv autotune cache at a per-test temp file: tests must
+    never read knobs from (or write records into) the developer's real
+    ``~/.cache/repro/convtune.json``."""
+    from repro.core import autotune
+    monkeypatch.setenv(autotune.CACHE_ENV,
+                       str(tmp_path / "convtune.json"))
+    autotune.reset_memory_cache()
+    yield
+    autotune.reset_memory_cache()
 
 try:                                    # pragma: no cover - env-dependent
     import hypothesis  # noqa: F401

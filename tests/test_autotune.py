@@ -1,0 +1,202 @@
+"""Conv autotuner tests: cache round-trip determinism, model-guided and
+measured search, the ops.conv2d consultation path, and the packed-params
+layer wiring (DESIGN.md §4).
+
+The autouse conftest fixture points the cache at a per-test temp file, so
+everything here is hermetic.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.tiling import VMEM_BYTES
+from repro.kernels import ops, ref
+from repro.models import layers
+from repro.models.base import init_params
+
+RNG = np.random.default_rng(5)
+
+X_SHAPE = (1, 16, 16, 8)
+W_SHAPE = (3, 3, 8, 12)
+
+
+def _allclose(a, b, tol=2e-3):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    scale = float(np.abs(b).max()) + 1e-6
+    assert float(np.abs(a - b).max()) / scale < tol
+
+
+# ---------------------------------------------------------------------------
+# Cache round trip + determinism
+# ---------------------------------------------------------------------------
+
+def test_tune_round_trip_is_deterministic():
+    rec1 = autotune.tune(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    rec2 = autotune.tune(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    assert rec1 == rec2                       # same inputs, same winner
+    key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    assert autotune.lookup(key) == rec1
+    # survives dropping the in-process memo: read back from the JSON file
+    autotune.reset_memory_cache()
+    assert autotune.lookup(key) == rec1
+    # and the on-disk schema is what DESIGN.md documents
+    with open(autotune.cache_path()) as f:
+        data = json.load(f)
+    assert data["version"] == 1
+    assert data["entries"][key]["tile_h"] == rec1["tile_h"]
+    assert rec1["dataflow"] in autotune.DATAFLOWS
+    assert rec1["source"] == "model"
+
+
+def test_store_overwrites_and_persists_atomically():
+    key = "conv2d:test"
+    autotune.store(key, dict(tile_h=4, tile_cout=8, dataflow="carry"))
+    autotune.store(key, dict(tile_h=8, tile_cout=8, dataflow="halo"))
+    autotune.reset_memory_cache()
+    assert autotune.lookup(key)["tile_h"] == 8
+    assert not os.path.exists(autotune.cache_path() + ".tmp")
+
+
+def test_lookup_missing_cache_returns_none():
+    assert autotune.lookup("conv2d:absent") is None
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+
+
+def test_knobs_for_validates_records_and_env_kill_switch(monkeypatch):
+    key = autotune.make_key(X_SHAPE, W_SHAPE, stride=2, pad=0)
+    # invalid: tile_h not a stride multiple -> rejected, not crashed
+    autotune.store(key, dict(tile_h=3, tile_cout=8, dataflow="carry"))
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE, stride=2) is None
+    autotune.store(key, dict(tile_h=4, tile_cout=8, dataflow="halo"))
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE, stride=2)["tile_h"] == 4
+    monkeypatch.setenv(autotune.AUTOTUNE_ENV, "0")
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE, stride=2) is None
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def test_candidates_cover_both_dataflows_and_fit_vmem():
+    plans = autotune.candidate_knobs(X_SHAPE, W_SHAPE)
+    assert {p.dataflow for p in plans} == set(autotune.DATAFLOWS)
+    assert all(p.vmem_resident_bytes <= VMEM_BYTES for p in plans)
+    # the full-height strip (one grid step along H) is always a candidate
+    assert any(p.g_tiles == 1 for p in plans)
+
+
+def test_measured_tune_records_wall_clock():
+    rec = autotune.tune((1, 8, 8, 4), (3, 3, 4, 4), measure=True,
+                        measure_top_k=2, write=False)
+    assert rec["source"] == "measured"
+    assert rec["measured_us"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ops.conv2d consults the cache
+# ---------------------------------------------------------------------------
+
+def test_conv2d_uses_cached_knobs(monkeypatch):
+    x = jnp.asarray(RNG.standard_normal((1, 14, 14, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(W_SHAPE) * .3, jnp.float32)
+    # 'same' K=3 s=1 pre-pads to 16x16; that's the key conv2d looks up
+    key = autotune.make_key((1, 16, 16, 8), W_SHAPE, stride=1, pad=0)
+    autotune.store(key, dict(tile_h=6, tile_cout=4, dataflow="halo",
+                             source="model"))
+
+    seen = {}
+    real = ops.trim_conv2d
+
+    def spy(*args, **kw):
+        seen.update(kw)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops, "trim_conv2d", spy)
+    got = ops.conv2d(x, w)
+    assert (seen["tile_h"], seen["tile_cout"], seen["dataflow"]) \
+        == (6, 4, "halo")
+    _allclose(got, ref.conv2d(x, w))
+    # explicit knobs win over the cache
+    seen.clear()
+    ops.conv2d(x, w, tile_h=8, dataflow="carry")
+    assert (seen["tile_h"], seen["tile_cout"], seen["dataflow"]) \
+        == (8, 4, "carry")
+    # kill switch restores the plan defaults
+    seen.clear()
+    ops.conv2d(x, w, use_autotune_cache=False)
+    assert (seen["tile_h"], seen["dataflow"]) == (None, "carry")
+
+
+@pytest.mark.parametrize("lname", ["pw1", "dw2"])
+def test_hillclimb_write_cache_feeds_conv2d(lname):
+    """The sweep->cache->conv2d loop: benchmarks/hillclimb.py --conv
+    --write-cache stores a record under the exact key ops.conv2d looks
+    up — including the stride-2 'same' case where the kernel-seen
+    pre-pad is asymmetric (dw2: 112 -> 113 rows, not the layer's
+    symmetric 114)."""
+    import importlib
+    hillclimb = importlib.import_module("benchmarks.hillclimb")
+    res = hillclimb.conv_hillclimb(f"mobilenet:{lname}",
+                                   ("carry", "halo"), write_cache=True)
+    assert res["best"] is not None
+    rec = autotune.lookup(res["cache_key"])
+    assert rec["tile_h"] == res["best"]["tile_h"]
+    # the stored key is found through the exact lookup ops.conv2d does
+    from repro.core import mobilenet_layers
+    layer = [l for l in mobilenet_layers() if l.name == lname][0]
+    w_shape = (layer.kernel, layer.kernel,
+               layer.in_channels // layer.groups, layer.out_channels)
+    x_shape, pad = ops.kernel_input_shape(
+        (1, layer.ifmap, layer.ifmap, layer.in_channels), layer.kernel,
+        layer.stride, "same" if layer.padding else "valid")
+    got = autotune.knobs_for(x_shape, w_shape, stride=layer.stride,
+                             pad=pad, groups=layer.groups)
+    assert got == rec
+
+
+# ---------------------------------------------------------------------------
+# Packed layer params (models/layers.py wiring)
+# ---------------------------------------------------------------------------
+
+def test_conv2d_pack_params_matches_unpacked():
+    import jax
+    p = init_params(layers.conv2d_params(3, 8, 12),
+                    jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.standard_normal((1, 12, 12, 8)), jnp.float32)
+    want = layers.conv2d_apply(p, x, activation="relu")
+    packed = layers.conv2d_pack_params(p, x_shape=x.shape)
+    got = layers.conv2d_apply(packed, x, activation="relu")
+    _allclose(got, want, tol=1e-6)
+
+
+def test_depthwise_separable_pack_matches_unpacked():
+    import jax
+    p = init_params(layers.depthwise_separable_params(3, 8, 16),
+                    jax.random.PRNGKey(1))
+    x = jnp.asarray(RNG.standard_normal((1, 10, 10, 8)), jnp.float32)
+    want = layers.depthwise_separable_apply(p, x, stride=2)
+    packed = layers.depthwise_separable_pack_params(p, x_shape=x.shape,
+                                                    stride=2)
+    got = layers.depthwise_separable_apply(packed, x, stride=2)
+    _allclose(got, want, tol=1e-6)
+
+
+def test_packed_params_pick_up_cached_plan():
+    """Pack-time cache consultation: a tuned record fixes the packed
+    tile_cout and rides along as tile_h/dataflow hints."""
+    key = autotune.make_key((1, 14, 14, 8), (3, 3, 8, 12),
+                            stride=1, pad=0)
+    autotune.store(key, dict(tile_h=4, tile_cout=6, dataflow="halo",
+                             source="model"))
+    w = jnp.asarray(RNG.standard_normal(W_SHAPE) * .3, jnp.float32)
+    pk = ops.pack_conv2d_weights(w, x_shape=(1, 12, 12, 8))
+    assert (pk.tile_cout, pk.tile_h, pk.dataflow) == (6, 4, "halo")
+    x = jnp.asarray(RNG.standard_normal((1, 12, 12, 8)), jnp.float32)
+    _allclose(ops.conv2d(x, pk), ref.conv2d(x, w))

@@ -108,33 +108,84 @@ def test_plan_validation():
 
 
 # ---------------------------------------------------------------------------
-# Kernel edge geometry vs the oracle
+# Kernel edge geometry vs the oracle — both dataflows (the halo-vs-carry
+# numerical-equivalence acceptance grid)
 # ---------------------------------------------------------------------------
 
-def test_conv2d_even_kernel_strided():
+DATAFLOWS = ["carry", "halo"]
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_conv2d_even_kernel_strided(dataflow):
     """stride > 1 with K even exercises the (K-1) % s != 0 row offset."""
     x = jnp.asarray(RNG.standard_normal((1, 18, 15, 5)), jnp.float32)
     for k, s in [(4, 2), (2, 2), (4, 3), (6, 2)]:
         w = jnp.asarray(RNG.standard_normal((k, k, 5, 6)) * .2, jnp.float32)
-        _allclose(ops.conv2d(x, w, stride=s, padding="valid"),
+        _allclose(ops.conv2d(x, w, stride=s, padding="valid",
+                             dataflow=dataflow),
                   ref.conv2d(x, w, stride=s, padding="valid"))
 
 
-def test_conv2d_tile_h_not_dividing_h_out():
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_conv2d_tile_h_not_dividing_h_out(dataflow):
     """h_out = 14 with tile_h in {3, 4, 5}: bottom strips are ragged."""
     x = jnp.asarray(RNG.standard_normal((1, 16, 10, 4)), jnp.float32)
     w = jnp.asarray(RNG.standard_normal((3, 3, 4, 8)) * .3, jnp.float32)
     want = ref.conv2d(x, w, padding="valid")
     for th in (3, 4, 5):
-        _allclose(trim_conv2d(x, w, tile_h=th), want)
+        _allclose(trim_conv2d(x, w, tile_h=th, dataflow=dataflow), want)
 
 
-def test_conv2d_cout_not_dividing_tile_cout():
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_conv2d_cout_not_dividing_tile_cout(dataflow):
     """cout = 10 with tile_cout = 4: the last cout tile is zero-padded."""
     x = jnp.asarray(RNG.standard_normal((1, 12, 9, 3)), jnp.float32)
     w = jnp.asarray(RNG.standard_normal((3, 3, 3, 10)) * .3, jnp.float32)
-    _allclose(trim_conv2d(x, w, tile_cout=4),
+    _allclose(trim_conv2d(x, w, tile_cout=4, dataflow=dataflow),
               ref.conv2d(x, w, padding="valid"))
+
+
+def test_halo_equals_carry_bitwise_across_geometries():
+    """The two dataflows consume identical window contents, so they must
+    agree exactly (not just to tolerance) across stride/pad/group edges."""
+    for (h, w, cin, cout, k, s, pad, g) in [
+            (16, 10, 4, 8, 3, 1, 0, 1), (17, 13, 5, 6, 4, 2, 1, 1),
+            (12, 11, 8, 8, 3, 2, 1, 4), (9, 9, 6, 6, 5, 3, 2, 2),
+            (8, 8, 4, 4, 1, 1, 0, 1)]:
+        x = jnp.asarray(RNG.standard_normal((2, h, w, cin)), jnp.float32)
+        wt = jnp.asarray(RNG.standard_normal((k, k, cin // g, cout)) * .3,
+                         jnp.float32)
+        a = trim_conv2d(x, wt, stride=s, pad=pad, groups=g,
+                        dataflow="carry")
+        b = trim_conv2d(x, wt, stride=s, pad=pad, groups=g,
+                        dataflow="halo")
+        assert jnp.array_equal(a, b), (h, w, k, s, pad, g)
+
+
+def test_halo_plan_geometry_and_traffic():
+    """Halo plan: overlapping window block, K-1 extra top rows, and the
+    plan's own accounting equals the legacy 'trim' mode."""
+    plan = ConvPlan(n=1, h=32, w=32, cin=16, cout=32, kh=3, kw=3,
+                    tile_h=8, dataflow="halo")
+    assert plan.halo_in_block == (1, 8 + 2, plan.wp, 16)
+    assert plan.halo_padded_input_shape == \
+        (1, 2 + plan.rows_padded, plan.wp, 16)
+    assert plan.traffic_mode == "trim"
+    assert plan.hbm_bytes() == plan.hbm_bytes("trim")
+    carry = ConvPlan(n=1, h=32, w=32, cin=16, cout=32, kh=3, kw=3,
+                     tile_h=8)
+    assert carry.traffic_mode == "3dtrim"
+    assert carry.hbm_bytes() == carry.hbm_bytes("3dtrim")
+    # halo pays (g_tiles - 1) * (K-1) extra rows; carry pays none
+    assert plan.hbm_bytes()["input"] > carry.hbm_bytes()["input"]
+    assert plan.halo_rows() == (plan.g_tiles - 1) * 2
+    assert carry.halo_rows() == 0
+    # resident sets agree to within the kh=1 scratch floor
+    assert abs(plan.vmem_resident_bytes - carry.vmem_resident_bytes) \
+        <= plan.wp * plan.cin_per_group * plan.dtype_bytes
+    with pytest.raises(ValueError):
+        ConvPlan(n=1, h=8, w=8, cin=4, cout=8, kh=3, kw=3,
+                 dataflow="weird")
 
 
 # ---------------------------------------------------------------------------

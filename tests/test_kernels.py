@@ -24,6 +24,7 @@ def _allclose(a, b, tol=2e-3):
 # trim_conv2d
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("dataflow", ["carry", "halo"])
 @pytest.mark.parametrize("h,w,cin,cout,k,s,padding", [
     (8, 8, 4, 8, 3, 1, "same"),
     (14, 14, 16, 32, 3, 1, "same"),
@@ -34,11 +35,12 @@ def _allclose(a, b, tol=2e-3):
     (16, 16, 4, 4, 1, 1, "valid"),
     (12, 20, 5, 7, 7, 3, "valid"),
 ])
-def test_conv2d_vs_oracle(h, w, cin, cout, k, s, padding):
+def test_conv2d_vs_oracle(h, w, cin, cout, k, s, padding, dataflow):
     x = jnp.asarray(RNG.standard_normal((2, h, w, cin)), jnp.float32)
     wt = jnp.asarray(RNG.standard_normal((k, k, cin, cout)) * 0.2,
                      jnp.float32)
-    got = ops.conv2d(x, wt, stride=s, padding=padding, impl="pallas")
+    got = ops.conv2d(x, wt, stride=s, padding=padding, impl="pallas",
+                     dataflow=dataflow)
     want = ref.conv2d(x, wt, stride=s, padding=padding)
     assert got.shape == want.shape
     _allclose(got, want)
@@ -70,13 +72,63 @@ def test_conv2d_property(h, w, cin, cout, k, s):
 
 
 def test_conv2d_tile_boundaries():
-    """Strips + carry must agree with the oracle at every tile_h."""
+    """Strips + carry (or halo over-fetch) must agree with the oracle at
+    every tile_h."""
     from repro.kernels.trim_conv2d import trim_conv2d
     x = jnp.asarray(RNG.standard_normal((1, 16, 10, 4)), jnp.float32)
     wt = jnp.asarray(RNG.standard_normal((3, 3, 4, 8)) * 0.3, jnp.float32)
     want = ref.conv2d(x, wt, padding="valid")
     for th in (1, 2, 4, 8, 16):
-        _allclose(trim_conv2d(x, wt, tile_h=th), want)
+        for df in ("carry", "halo"):
+            _allclose(trim_conv2d(x, wt, tile_h=th, dataflow=df), want)
+
+
+# ---------------------------------------------------------------------------
+# packed weights (load-time pad/reshape) vs the per-call path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("groups,cout,tile_cout,activation", [
+    (1, 12, None, None),
+    (1, 10, 4, "relu"),      # ragged cout tile: padded channels sliced off
+    (4, 8, None, "gelu"),    # grouped
+    (8, 16, 2, None),        # depthwise-ish with tiny tiles
+])
+def test_packed_weights_match_unpacked(groups, cout, tile_cout, activation):
+    cin = 8
+    x = jnp.asarray(RNG.standard_normal((2, 12, 11, cin)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, cin // groups, cout)) * .3,
+                    jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((cout,)), jnp.float32)
+    want = ops.conv2d(x, w, bias=b, activation=activation,
+                      feature_group_count=groups)
+    pk = ops.pack_conv2d_weights(w, b, groups=groups, tile_cout=tile_cout)
+    got = ops.conv2d(x, pk, activation=activation)
+    _allclose(got, want, tol=1e-6)
+    for df in ("carry", "halo"):
+        _allclose(ops.conv2d(x, pk, activation=activation, dataflow=df),
+                  want, tol=1e-6)
+
+
+def test_packed_weights_is_jit_transparent_pytree():
+    """Packed params must survive jit boundaries: arrays are leaves, the
+    tile knobs static."""
+    x = jnp.asarray(RNG.standard_normal((1, 10, 10, 4)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 4, 6)) * .3, jnp.float32)
+    pk = ops.pack_conv2d_weights(w, tile_cout=2)
+
+    @jax.jit
+    def fwd(x, pk):
+        return ops.conv2d(x, pk, padding="valid")
+
+    _allclose(fwd(x, pk), ref.conv2d(x, w, padding="valid"))
+    leaves = jax.tree_util.tree_leaves(pk)
+    assert all(hasattr(l, "shape") for l in leaves)
+
+
+def test_pack_rejects_kernel_tiled_k():
+    w = jnp.zeros((11, 11, 3, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.pack_conv2d_weights(w)
 
 
 def test_hbm_traffic_model_shadow_vs_halo():
