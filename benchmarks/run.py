@@ -12,6 +12,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     so a regression in either path is visible, plus the
                     tuned-tiles + packed-weights config vs the seed
                     default (derived = speedup).
+  * train_*       — one jitted CNN training step on trim kernels
+                    (fwd + custom_vjp bwd + AdamW) vs the pure-XLA step,
+                    and the modeled fwd+bwd roofline of a conv layer
+                    (``--train`` emits only these — the training perf
+                    artifact CI uploads).
   * roofline_*    — summary of the dry-run artifact (derived = projected
                     roofline fraction), if artifacts/dryrun_matrix.json
                     exists.
@@ -173,6 +178,65 @@ def bench_kernels(emit, smoke: bool = False):
     emit("kernel_flashattn_pallas_interp", us_k, f"chunked={us_c:.0f}us")
 
 
+def bench_train_step(emit):
+    """One jitted CNN training step (fwd + custom_vjp bwd + AdamW) run
+    entirely on trim kernels, against the pure-XLA (`impl="ref"`) step —
+    plus the modeled fwd+bwd roofline of one conv layer from the same
+    plan objects the backward kernels execute."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.conv_plan import ConvPlan
+    from repro.core.roofline import conv_plan_roofline, sum_terms
+    from repro.models import layers
+    from repro.models.base import init_params
+    from repro.optim import AdamWConfig, adamw
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 16, 16, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, size=4), jnp.int32)
+    params = init_params(
+        layers.simple_cnn_params(cin=3, channels=(8,), n_classes=10,
+                                 depthwise_stage=True),
+        jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=10)
+    moments = adamw.init_moments(params, opt_cfg)
+
+    def make_step(impl):
+        def loss_fn(p):
+            logits = layers.simple_cnn_apply(p, x, impl=impl)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+        @jax.jit
+        def step(p, m):
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, m, _ = adamw.apply_updates(p, grads, m, jnp.int32(0),
+                                          opt_cfg)
+            return p, m, loss
+        return step
+
+    step_k = make_step("pallas")
+    step_r = make_step("ref")
+    us_k = _time(lambda: jax.block_until_ready(step_k(params, moments)))
+    us_r = _time(lambda: jax.block_until_ready(step_r(params, moments)))
+    emit("train_step_cnn_trim", us_k,
+         f"xla_ref={us_r:.0f}us|ratio={us_k / max(us_r, 1e-9):.2f}")
+
+    # modeled fwd+bwd roofline of the first conv layer, from the same
+    # ConvPlan/WeightGradPlan objects the kernels execute
+    shapes = ((4, 18, 18, 3), (3, 3, 3, 8))
+    fwd = ConvPlan.build(*shapes)
+    ig = ConvPlan.build_input_grad(*shapes)
+    wg = ConvPlan.build_weight_grad(*shapes)
+    total = sum_terms("conv0_train", [
+        conv_plan_roofline("fwd", fwd), conv_plan_roofline("igrad", ig),
+        conv_plan_roofline("wgrad", wg)])
+    emit("train_plan_conv0_fwd_bwd", total.step_time_s * 1e6,
+         f"bwd/fwd_bytes="
+         f"{(ig.hbm_bytes()['total'] + wg.hbm_bytes()['total']) / max(fwd.hbm_bytes()['total'], 1):.2f}|"
+         f"{total.dominant}")
+
+
 def bench_roofline(emit):
     path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                         "dryrun_matrix.json")
@@ -205,6 +269,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: analytical models + tiny kernels")
+    ap.add_argument("--train", action="store_true",
+                    help="only the training-step benches (the training "
+                         "perf artifact CI uploads)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows as JSON (+ git rev) for the "
                          "perf-trajectory artifact")
@@ -216,18 +283,26 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         rows.append(dict(name=name, us=round(us, 1), derived=derived))
 
-    bench_fig1(emit)
-    bench_fig6(emit)
-    bench_conv_plan(emit)
-    if args.smoke:
+    if args.train:
+        bench_train_step(emit)
+    elif args.smoke:
+        bench_fig1(emit)
+        bench_fig6(emit)
+        bench_conv_plan(emit)
         bench_kernels(emit, smoke=True)
     else:
+        bench_fig1(emit)
+        bench_fig6(emit)
+        bench_conv_plan(emit)
         bench_table1(emit)
         bench_simulator(emit)
         bench_kernels(emit)
+        bench_train_step(emit)
         bench_roofline(emit)
     if args.json:
         payload = dict(rev=_git_rev(), smoke=args.smoke,
+                       mode=("train" if args.train
+                             else "smoke" if args.smoke else "full"),
                        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
                        rows=rows)
         os.makedirs(os.path.dirname(os.path.abspath(args.json)),

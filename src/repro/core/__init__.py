@@ -2,7 +2,8 @@
 tiling, roofline."""
 
 from repro.core.conv_plan import (  # noqa: F401
-    ConvPlan, Conv1dPlan, slice_reads_per_channel,
+    ConvPlan, Conv1dPlan, WeightGradPlan, input_grad_geometry,
+    slice_reads_per_channel,
 )
 from repro.core.model import (  # noqa: F401
     ConvLayer, HWConfig, TRIM, TRIM_3D,

@@ -34,7 +34,7 @@ import json
 import os
 import time
 
-from repro.core.conv_plan import ConvPlan
+from repro.core.conv_plan import ConvPlan, input_grad_geometry
 from repro.core.roofline import conv_plan_roofline
 from repro.core.tiling import VMEM_BYTES
 
@@ -105,16 +105,20 @@ def store(key: str, record: dict, path: str | None = None) -> str:
 
 def make_key(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
              groups: int = 1, dtype: str = "float32",
-             backend: str | None = None) -> str:
+             backend: str | None = None, op: str = "conv2d") -> str:
     """Cache key for one conv problem.  ``x_shape`` is the shape the
     kernel actually sees (i.e. *after* any 'same' pre-padding, with
-    ``pad`` the residual symmetric padding)."""
+    ``pad`` the residual symmetric padding).  ``op`` namespaces the
+    record: ``"conv2d"`` for forward (and the input-grad conv, which IS
+    a forward problem over its transformed shapes), ``"conv2d_wgrad"``
+    for the weight-gradient kernel — backward records can never collide
+    with forward ones even when the raw shape tuple matches."""
     if backend is None:
         import jax
         backend = jax.default_backend()
     n, h, w, cin = x_shape
     kh, kw, _, cout = w_shape
-    return (f"conv2d:n{n}h{h}w{w}cin{cin}cout{cout}k{kh}x{kw}"
+    return (f"{op}:n{n}h{h}w{w}cin{cin}cout{cout}k{kh}x{kw}"
             f"s{stride}p{pad}g{groups}:{dtype}:{backend}")
 
 
@@ -140,6 +144,31 @@ def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                           groups=groups, dtype=dtype, backend=backend),
                  path)
     if rec is not None and _valid_record(rec, stride):
+        return rec
+    return None
+
+
+def _valid_wgrad_record(rec) -> bool:
+    return (isinstance(rec, dict)
+            and isinstance(rec.get("tile_go"), int)
+            and isinstance(rec.get("tile_cout"), int)
+            and rec["tile_go"] >= 1 and rec["tile_cout"] >= 1)
+
+
+def weight_grad_knobs_for(x_shape, w_shape, *, stride: int = 1,
+                          pad: int = 0, groups: int = 1,
+                          dtype: str = "float32",
+                          backend: str | None = None,
+                          path: str | None = None) -> dict | None:
+    """Cached (validated) knobs for the weight-gradient kernel of one
+    forward problem, or None — the lookup the conv backward pass
+    performs by default.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
+    if os.environ.get(AUTOTUNE_ENV, "1") == "0":
+        return None
+    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                          groups=groups, dtype=dtype, backend=backend,
+                          op="conv2d_wgrad"), path)
+    if rec is not None and _valid_wgrad_record(rec):
         return rec
     return None
 
@@ -262,3 +291,95 @@ def tune(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                        groups=groups, dtype=dtype, backend=backend),
               record, path)
     return record
+
+
+# ---------------------------------------------------------------------------
+# Backward shapes (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def candidate_weight_grad_knobs(x_shape, w_shape, *, stride: int = 1,
+                                pad: int = 0, groups: int = 1,
+                                dtype_bytes: int = 4,
+                                vmem_bytes: int = VMEM_BYTES) -> list:
+    """VMEM-feasible ``WeightGradPlan`` candidates over
+    (tile_go, tile_cout) — cotangent-strip ticks at powers of two plus
+    the full-height strip, per-group C_out tiles as in the forward
+    search."""
+    base = ConvPlan.build_weight_grad(x_shape, w_shape, stride=stride,
+                                      pad=pad, groups=groups,
+                                      dtype_bytes=dtype_bytes)
+    go_ticks = sorted({t for t in (1, 2, 4, 8, 16, 32, base.tile_go,
+                                   base.h_out) if t <= base.h_out})
+    cout_pg = base.cout_per_group
+    c_ticks = sorted({t for t in (32, 64, 128, base.tile_cout, cout_pg)
+                      if t <= cout_pg})
+    plans = []
+    for tg in go_ticks:
+        for tc in c_ticks:
+            try:
+                plan = ConvPlan.build_weight_grad(
+                    x_shape, w_shape, stride=stride, pad=pad,
+                    groups=groups, dtype_bytes=dtype_bytes, tile_go=tg,
+                    tile_cout=tc)
+            except ValueError:
+                continue
+            if plan.vmem_resident_bytes <= vmem_bytes:
+                plans.append(plan)
+    return plans
+
+
+def tune_weight_grad(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+                     groups: int = 1, dtype: str = "float32",
+                     dtype_bytes: int = 4, backend: str | None = None,
+                     write: bool = True, path: str | None = None) -> dict:
+    """Tune the weight-gradient kernel for one forward problem and (by
+    default) persist the winner under its ``conv2d_wgrad`` key.  Ranked
+    by the plan's analytical roofline step time; fewer grid steps win
+    ties (the accumulating output block serializes the sweep, so grid
+    overhead is pure latency)."""
+    plans = candidate_weight_grad_knobs(x_shape, w_shape, stride=stride,
+                                        pad=pad, groups=groups,
+                                        dtype_bytes=dtype_bytes)
+    if not plans:
+        raise ValueError(f"no feasible wgrad candidates for "
+                         f"{x_shape}/{w_shape}")
+    def score(p):
+        terms = conv_plan_roofline("tune", p)
+        return (terms.step_time_s, p.hbm_bytes()["total"],
+                p.go_tiles * p.co_tiles, p.tile_cout)
+    best = min(plans, key=score)
+    record = dict(tile_go=best.tile_go, tile_cout=best.tile_cout,
+                  source="model",
+                  model_step_time_s=conv_plan_roofline(
+                      "tune", best).step_time_s, measured_us=None)
+    if write:
+        store(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                       groups=groups, dtype=dtype, backend=backend,
+                       op="conv2d_wgrad"), record, path)
+    return record
+
+
+def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+                  groups: int = 1, dtype: str = "float32",
+                  dtype_bytes: int = 4, backend: str | None = None,
+                  measure: bool = False, write: bool = True,
+                  path: str | None = None) -> dict:
+    """Tune both cotangents of one forward problem.
+
+    The input-gradient conv IS a forward problem over its transformed
+    (stride-dilated, edge-padded) shapes, so it reuses :func:`tune` —
+    and its record lands under the plain ``conv2d`` key of that
+    transformed problem, exactly where the backward pass looks it up.
+    The weight-gradient kernel gets its own ``conv2d_wgrad`` record.
+    Returns ``{"input_grad": rec, "weight_grad": rec}``.
+    """
+    geo = input_grad_geometry(x_shape, w_shape, stride=stride, pad=pad,
+                              groups=groups)
+    igrad = tune(geo["g_padded_shape"], geo["wt_shape"], stride=1, pad=0,
+                 groups=groups, dtype=dtype, dtype_bytes=dtype_bytes,
+                 backend=backend, measure=measure, write=write, path=path)
+    wgrad = tune_weight_grad(x_shape, w_shape, stride=stride, pad=pad,
+                             groups=groups, dtype=dtype,
+                             dtype_bytes=dtype_bytes, backend=backend,
+                             write=write, path=path)
+    return {"input_grad": igrad, "weight_grad": wgrad}

@@ -33,6 +33,25 @@ This module owns all of it (DESIGN.md §3):
   The autotuner (``core/autotune.py``) picks the dataflow per layer from
   exactly these numbers.
 
+* **Backward planning** — training runs the two conv cotangents as TrIM
+  convolutions themselves (DESIGN.md §5), and their geometry comes from
+  the same single source of truth:
+
+  * :func:`input_grad_geometry` / :meth:`ConvPlan.build_input_grad` —
+    the input cotangent is a *stride-1* TrIM convolution of the
+    stride-dilated, edge-padded output cotangent with the spatially
+    flipped, channel-transposed weights.  ``build_input_grad`` returns
+    the ordinary :class:`ConvPlan` that conv executes, so the backward
+    pass inherits the full ``carry``/``halo`` dataflow axis, the strip
+    math and the HBM accounting of the forward kernel.
+  * :class:`WeightGradPlan` / :meth:`ConvPlan.build_weight_grad` — the
+    weight cotangent is a conv of the ifmap over the cotangent with the
+    *spatial* axes contracted: strips of cotangent rows stay resident
+    with their overlapping ifmap window (a halo-style fetch) while the
+    K x K taps accumulate into a weight-shaped output revisited across
+    the (batch, strip) sweep.  The plan owns the strip/grid/padded
+    layouts and the analytical HBM bytes of that schedule.
+
 * :class:`Conv1dPlan` — the 1D image of the same plan, consumed by
   ``kernels/trim_conv1d.py``.
 
@@ -176,6 +195,68 @@ class ConvPlan:
             stride=layer.stride, pad=layer.padding, groups=groups,
             dtype_bytes=dtype_bytes, tile_h=tile_h, tile_cout=tile_cout,
             dataflow=dataflow, vmem_budget=vmem_budget)
+
+    @classmethod
+    def build_input_grad(cls, x_shape, w_shape, *, stride: int = 1,
+                         pad: int = 0, groups: int = 1,
+                         dtype_bytes: int = 4, tile_h: int | None = None,
+                         tile_cout: int | None = None,
+                         dataflow: str = "carry",
+                         vmem_budget: int = STRIP_VMEM_BUDGET
+                         ) -> "ConvPlan":
+        """Plan for the *input-gradient* conv of a forward problem.
+
+        ``x_shape`` / ``w_shape`` / ``stride`` / ``pad`` describe the
+        FORWARD convolution (the shapes the forward kernel saw).  The
+        returned plan is the ordinary stride-1 ConvPlan that the input
+        cotangent executes: input = the stride-dilated, ``K-1-pad``
+        edge-padded output cotangent ``(N, ·, ·, Cout)``; weights = the
+        flipped/transposed ``(KH, KW, Cout/groups, Cin)`` tensor.  Every
+        dataflow/tile knob of the forward kernel applies unchanged.
+        """
+        geo = input_grad_geometry(x_shape, w_shape, stride=stride,
+                                  pad=pad, groups=groups)
+        return cls.build(geo["g_padded_shape"], geo["wt_shape"], stride=1,
+                         pad=0, groups=groups, dtype_bytes=dtype_bytes,
+                         tile_h=tile_h, tile_cout=tile_cout,
+                         dataflow=dataflow, vmem_budget=vmem_budget)
+
+    @classmethod
+    def build_weight_grad(cls, x_shape, w_shape, *, stride: int = 1,
+                          pad: int = 0, groups: int = 1,
+                          dtype_bytes: int = 4,
+                          tile_go: int | None = None,
+                          tile_cout: int | None = None,
+                          vmem_budget: int = STRIP_VMEM_BUDGET
+                          ) -> "WeightGradPlan":
+        """Plan for the *weight-gradient* conv of a forward problem.
+
+        Arguments describe the FORWARD convolution; the returned
+        :class:`WeightGradPlan` owns the strip/grid/traffic math of the
+        spatially-contracted conv (ifmap over cotangent) the weight
+        cotangent kernel executes.
+        """
+        n, h, w, cin = x_shape
+        kh, kw, cin_pg, cout = w_shape
+        if cin_pg * groups != cin:
+            raise ValueError(
+                f"weights expect cin/groups={cin_pg} with groups={groups}, "
+                f"input has cin={cin}")
+        h_out = (h + 2 * pad - kh) // stride + 1
+        cout_pg = cout // groups
+        if tile_cout is None:
+            tile_cout = cout_pg
+        if tile_go is None:
+            wp = w + 2 * pad
+            row_bytes = wp * cin_pg * dtype_bytes
+            tile_go = max(1, min(
+                h_out, (vmem_budget // max(row_bytes, 1) - kh)
+                // max(stride, 1) + 1))
+        return WeightGradPlan(
+            n=n, h=h, w=w, cin=cin, cout=cout, kh=kh, kw=kw,
+            stride=stride, pad=pad, groups=groups,
+            dtype_bytes=dtype_bytes, tile_go=min(tile_go, h_out),
+            tile_cout=min(tile_cout, cout_pg), vmem_budget=vmem_budget)
 
     # -- problem geometry --------------------------------------------------
 
@@ -383,6 +464,255 @@ class ConvPlan:
                     th_out=self.th_out,
                     g_tiles=self.g_tiles, co_tiles=self.co_tiles,
                     carry_shape=self.carry_shape,
+                    vmem_resident_bytes=self.vmem_resident_bytes,
+                    flops=self.flops, hbm_total=t["total"],
+                    arithmetic_intensity=self.arithmetic_intensity())
+
+
+# ---------------------------------------------------------------------------
+# Backward geometry (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def input_grad_geometry(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+                        groups: int = 1) -> dict:
+    """Geometry of the input-gradient conv for one forward problem.
+
+    The input cotangent of ``y = conv(x, w, stride, pad)`` is itself a
+    *stride-1, valid* convolution:
+
+        dx = conv(dilate_s(dy) edge-padded by K-1-pad, flip_hw(w)^T)
+
+    where the bottom/right padding carries ``(dim + 2*pad - K) % stride``
+    extra zeros so the result lands exactly back on ``x``'s shape.
+    Requires ``pad <= K-1`` on both axes (true for 'same' and 'valid').
+
+    Returns a dict with the dilated cotangent shape (``g_dilated_shape``),
+    the padded conv input (``g_padded_shape``), the per-axis pad tuples
+    (``pad_h``/``pad_w``) and the transposed weight shape (``wt_shape``
+    = ``(KH, KW, Cout/groups, Cin)``).
+    """
+    n, h, w, cin = x_shape
+    kh, kw, cin_pg, cout = w_shape
+    if cin_pg * groups != cin:
+        raise ValueError(
+            f"weights expect cin/groups={cin_pg} with groups={groups}, "
+            f"input has cin={cin}")
+    if pad > kh - 1 or pad > kw - 1:
+        raise ValueError(
+            f"input-grad conv requires pad <= K-1, got pad={pad} "
+            f"for K=({kh}, {kw})")
+    s = stride
+    h_out = (h + 2 * pad - kh) // s + 1
+    w_out = (w + 2 * pad - kw) // s + 1
+    hd = (h_out - 1) * s + 1
+    wd = (w_out - 1) * s + 1
+    r_h = (h + 2 * pad - kh) % s
+    r_w = (w + 2 * pad - kw) % s
+    pad_h = (kh - 1 - pad, kh - 1 - pad + r_h)
+    pad_w = (kw - 1 - pad, kw - 1 - pad + r_w)
+    return dict(
+        h_out=h_out, w_out=w_out, stride=s,
+        g_dilated_shape=(n, hd, wd, cout),
+        g_padded_shape=(n, hd + sum(pad_h), wd + sum(pad_w), cout),
+        pad_h=pad_h, pad_w=pad_w,
+        wt_shape=(kh, kw, cout // groups, cin),
+    )
+
+
+@dataclass(frozen=True)
+class WeightGradPlan:
+    """Geometry + traffic plan for one weight-gradient conv.
+
+    The weight cotangent contracts the *spatial* axes:
+
+        dw[ki, kj, ci, co] = sum_{n, oy, ox}
+            x_pad[n, oy*s + ki, ox*s + kj, ci] * dy[n, oy, ox, co]
+
+    The kernel schedule (``kernels/trim_conv2d.trim_conv2d_weight_grad``)
+    keeps ``tile_go`` cotangent rows resident per grid step together with
+    their overlapping ifmap window of ``(tile_go-1)*s + KH`` rows (a
+    halo-style fetch — successive windows share ``KH - s`` rows), runs the
+    K x K taps as dense MXU matmuls ``(Cin/g, TGo*W_out) x (TGo*W_out,
+    TCout)``, and accumulates into a weight-shaped fp32 output block
+    revisited across the sequential (batch, strip) sweep — the
+    shadow-register idea applied to a weight-stationary drain.
+
+    All fields describe the FORWARD problem (``h``/``w`` already include
+    any 'same' pre-padding folded by the caller; ``pad`` is the residual
+    symmetric padding, normally 0).
+    """
+
+    n: int
+    h: int
+    w: int
+    cin: int
+    cout: int
+    kh: int
+    kw: int
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    dtype_bytes: int = 4
+    tile_go: int = 8           # cotangent rows resident per grid step
+    tile_cout: int = 128       # C_out tile per grid step (per group)
+    vmem_budget: int = STRIP_VMEM_BUDGET
+
+    def __post_init__(self):
+        if self.cin % self.groups or self.cout % self.groups:
+            raise ValueError(
+                f"groups={self.groups} must divide cin={self.cin} and "
+                f"cout={self.cout}")
+        if self.tile_go < 1:
+            raise ValueError(f"tile_go={self.tile_go} must be >= 1")
+        if self.h_out < 1 or self.w_out < 1:
+            raise ValueError("empty output: input smaller than kernel")
+
+    # -- problem geometry --------------------------------------------------
+
+    @property
+    def cin_per_group(self) -> int:
+        return self.cin // self.groups
+
+    @property
+    def cout_per_group(self) -> int:
+        return self.cout // self.groups
+
+    @property
+    def h_out(self) -> int:
+        """Cotangent rows (the forward output height)."""
+        return (self.h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w + 2 * self.pad - self.kw) // self.stride + 1
+
+    @property
+    def wp(self) -> int:
+        """Padded ifmap width (as the forward kernel sees it)."""
+        return self.w + 2 * self.pad
+
+    # -- strip geometry ----------------------------------------------------
+
+    @property
+    def go_tiles(self) -> int:
+        """Cotangent strips (grid steps along the output-row axis)."""
+        return math.ceil(self.h_out / self.tile_go)
+
+    @property
+    def go_rows_padded(self) -> int:
+        return self.go_tiles * self.tile_go
+
+    @property
+    def window_rows(self) -> int:
+        """Ifmap rows resident per grid step (overlapping halo window)."""
+        return (self.tile_go - 1) * self.stride + self.kh
+
+    @property
+    def x_rows_padded(self) -> int:
+        """Ifmap rows after bottom zero-padding so the last strip's
+        window is in bounds (padded rows only ever meet zero cotangent
+        rows, so they contribute nothing)."""
+        return (self.go_rows_padded - 1) * self.stride + self.kh
+
+    @property
+    def co_tiles(self) -> int:
+        return math.ceil(self.cout_per_group / self.tile_cout)
+
+    @property
+    def cout_padded_per_group(self) -> int:
+        return self.co_tiles * self.tile_cout
+
+    # -- pallas_call layout ------------------------------------------------
+
+    @property
+    def grid(self) -> tuple[int, int, int, int]:
+        """(groups, C_out tiles, N, strips) — (N, strip) innermost so the
+        revisited weight-shaped output block sees its whole accumulation
+        sweep on consecutive grid steps."""
+        return (self.groups, self.co_tiles, self.n, self.go_tiles)
+
+    @property
+    def padded_x_shape(self) -> tuple[int, int, int, int]:
+        return (self.n, self.x_rows_padded, self.wp, self.cin)
+
+    @property
+    def padded_g_shape(self) -> tuple[int, int, int, int]:
+        return (self.n, self.go_rows_padded, self.w_out,
+                self.groups * self.cout_padded_per_group)
+
+    @property
+    def x_block(self) -> tuple[int, int, int, int]:
+        """Unblocked (element-offset) window: the strip's cotangent rows'
+        receptive field."""
+        return (1, self.window_rows, self.wp, self.cin_per_group)
+
+    @property
+    def g_block(self) -> tuple[int, int, int, int]:
+        return (1, self.tile_go, self.w_out, self.tile_cout)
+
+    @property
+    def out_block(self) -> tuple[int, int, int, int]:
+        return (self.kh, self.kw, self.cin_per_group, self.tile_cout)
+
+    @property
+    def padded_out_shape(self) -> tuple[int, int, int, int]:
+        return (self.kh, self.kw, self.cin_per_group,
+                self.groups * self.cout_padded_per_group)
+
+    @property
+    def vmem_resident_bytes(self) -> int:
+        """Resident set of one grid step: ifmap window + cotangent strip
+        + the fp32 weight-shaped accumulator block."""
+        db = self.dtype_bytes
+        window = self.window_rows * self.wp * self.cin_per_group * db
+        gstrip = self.tile_go * self.w_out * self.tile_cout * db
+        acc = self.kh * self.kw * self.cin_per_group * self.tile_cout * 4
+        return window + gstrip + acc
+
+    # -- arithmetic / analytical HBM traffic --------------------------------
+
+    @property
+    def macs(self) -> int:
+        """Same MAC count as the forward conv (each forward MAC has
+        exactly one weight-grad image)."""
+        return (self.n * self.h_out * self.w_out * self.cout
+                * self.kh * self.kw * self.cin_per_group)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    def hbm_bytes(self, mode: str | None = None) -> dict:
+        """Analytical HBM bytes of the kernel's schedule.  The ifmap is
+        streamed window-by-window — successive windows overlap by
+        ``KH - stride`` rows (the halo this schedule pays) — and the whole
+        sweep repeats per C_out tile; the cotangent is read once per
+        C_out-tile sweep; the output is the padded weight block written
+        once.  ``mode`` is accepted for interface parity with
+        :class:`ConvPlan` (the schedule is fixed)."""
+        db = self.dtype_bytes
+        in_bytes = (self.n * self.go_tiles * self.window_rows * self.wp
+                    * self.cin * db * self.co_tiles)
+        # each (group, co) sweep reads only its own cotangent channel
+        # slice, so the full padded cotangent moves exactly once
+        g_bytes = (self.n * self.go_rows_padded * self.w_out
+                   * self.groups * self.cout_padded_per_group * db)
+        out_bytes = self.kh * self.kw * self.cin_per_group \
+            * self.groups * self.cout_padded_per_group * 4
+        ideal = self.n * self.x_rows_padded * self.wp * self.cin * db
+        return dict(input=in_bytes, weights=g_bytes, output=out_bytes,
+                    total=in_bytes + g_bytes + out_bytes,
+                    overhead_pct=100.0 * max(in_bytes - ideal, 0)
+                    / max(ideal, 1))
+
+    def arithmetic_intensity(self, mode: str | None = None) -> float:
+        return self.flops / max(self.hbm_bytes(mode)["total"], 1)
+
+    def as_dict(self) -> dict:
+        t = self.hbm_bytes()
+        return dict(grid=self.grid, tile_go=self.tile_go,
+                    tile_cout=self.tile_cout, go_tiles=self.go_tiles,
+                    co_tiles=self.co_tiles, window_rows=self.window_rows,
                     vmem_resident_bytes=self.vmem_resident_bytes,
                     flops=self.flops, hbm_total=t["total"],
                     arithmetic_intensity=self.arithmetic_intensity())

@@ -208,12 +208,37 @@ def analyze_compiled(cell: str, compiled, n_devices: int,
     )
 
 
+def sum_terms(cell: str, terms: list) -> RooflineTerms:
+    """Combine per-kernel roofline terms into one sequential-schedule
+    estimate (flops/bytes add; peak memory is the max single kernel).
+
+    Used for conv *training* steps: forward + input-grad + weight-grad
+    are three kernels whose plans each produce their own terms
+    (``conv_plan_roofline`` accepts ``WeightGradPlan`` too — the plans
+    duck-type the traffic/flops interface)."""
+    coll: dict = {}
+    for t in terms:
+        for k, v in t.coll_by_kind.items():
+            coll[k] = coll.get(k, 0.0) + v
+    return RooflineTerms(
+        cell=cell,
+        flops_per_dev=sum(t.flops_per_dev for t in terms),
+        hbm_bytes_per_dev=sum(t.hbm_bytes_per_dev for t in terms),
+        coll_bytes_per_dev=sum(t.coll_bytes_per_dev for t in terms),
+        coll_by_kind=coll,
+        peak_memory_bytes=max((t.peak_memory_bytes for t in terms),
+                              default=0.0),
+        model_flops_per_dev=sum(t.model_flops_per_dev for t in terms),
+    )
+
+
 def conv_plan_roofline(cell: str, plan, mode: str | None = None
                        ) -> RooflineTerms:
     """Roofline terms for one conv layer, read straight from its
-    ``ConvPlan`` — the same object the Pallas kernel executes, so the
-    hillclimb's T_mem uses exactly the kernel's strip/carry traffic.
-    ``mode=None`` accounts the plan's own ``dataflow``."""
+    ``ConvPlan`` (or ``WeightGradPlan``) — the same object the Pallas
+    kernel executes, so the hillclimb's T_mem uses exactly the kernel's
+    strip/carry traffic.  ``mode=None`` accounts the plan's own
+    ``dataflow``."""
     traffic = plan.hbm_bytes(mode)
     return RooflineTerms(
         cell=cell,

@@ -22,6 +22,13 @@ is filled from the persisted per-(shape, dtype, backend) record when one
 exists.  ``pack_conv2d_weights`` performs the kernel's weight pad/reshape
 once at load time; passing the resulting :class:`PackedConv2dWeights` as
 ``w`` skips the per-call packing in the hot path entirely.
+
+``conv2d`` / ``depthwise_conv2d`` are fully differentiable
+(DESIGN.md §5): a ``jax.custom_vjp`` runs both cotangents as TrIM
+convolutions (``trim_conv2d_input_grad`` / ``trim_conv2d_weight_grad``),
+consulting the autotune cache under the backward problems' own keys.
+Packed weights receive packed-layout cotangents; the K > MAX_NATIVE_K
+adder-tree path differentiates through each sub-kernel.
 """
 
 from __future__ import annotations
@@ -33,13 +40,17 @@ import math
 import jax
 import jax.numpy as jnp
 
+import typing
+
 from repro.core import autotune
-from repro.core.conv_plan import ConvPlan
+from repro.core.conv_plan import ConvPlan, input_grad_geometry
 from repro.core.tiling import subkernel_decomposition
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.trim_conv1d import trim_conv1d
-from repro.kernels.trim_conv2d import trim_conv2d
+from repro.kernels.trim_conv2d import (ACTIVATIONS, trim_conv2d,
+                                       trim_conv2d_input_grad,
+                                       trim_conv2d_weight_grad)
 
 MAX_NATIVE_K = 8
 
@@ -151,6 +162,164 @@ def kernel_input_shape(x_shape, k: int, stride: int, padding: str):
     return (n, h, w, cin), 0
 
 
+# ---------------------------------------------------------------------------
+# Differentiable conv core (custom_vjp) — DESIGN.md §5
+#
+# Both cotangents are TrIM convolutions: the input gradient is a stride-1
+# conv of the dilated/edge-padded cotangent with flipped/transposed
+# weights (the forward kernel, dataflow axis and all), the weight
+# gradient a dedicated spatially-contracting strip kernel.  The primal
+# path (no differentiation) still runs the fully fused kernel; under
+# jax.grad the fwd rule runs the epilogue unfused so the pre-activation
+# is available as a residual.
+# ---------------------------------------------------------------------------
+
+class _ConvVjpConfig(typing.NamedTuple):
+    """Static knobs of one differentiable conv call (hashable; a
+    nondiff argument of the custom_vjp cores)."""
+
+    stride: int
+    pad: int
+    groups: int
+    activation: str | None
+    tile_h: int | None
+    tile_cout: int | None
+    dataflow: str
+    use_autotune_cache: bool
+    packed_cout: int | None = None
+
+
+def _activation_bwd(activation: str | None, z: jax.Array | None,
+                    gy: jax.Array) -> jax.Array:
+    """Cotangent through the (jnp-level) epilogue activation."""
+    if activation is None:
+        return gy
+    return jax.vjp(ACTIVATIONS[activation], z)[1](gy)[0]
+
+
+def _backward_knobs(cfg: _ConvVjpConfig, x_shape, w_shape, dtype: str):
+    """Tile/dataflow knobs for the two cotangent kernels: the autotune
+    cache consulted under the backward problems' own keys (the
+    input-grad conv under the plain ``conv2d`` key of its transformed
+    shapes, the weight grad under ``conv2d_wgrad``), else defaults."""
+    ig = dict(tile_h=None, tile_cout=None, dataflow="carry")
+    wg = dict(tile_go=None, tile_cout=None)
+    if cfg.use_autotune_cache:
+        geo = input_grad_geometry(x_shape, w_shape, stride=cfg.stride,
+                                  pad=cfg.pad, groups=cfg.groups)
+        rec = autotune.knobs_for(geo["g_padded_shape"], geo["wt_shape"],
+                                 stride=1, pad=0, groups=cfg.groups,
+                                 dtype=dtype)
+        if rec is not None:
+            ig = dict(tile_h=rec["tile_h"], tile_cout=rec["tile_cout"],
+                      dataflow=rec["dataflow"])
+        wrec = autotune.weight_grad_knobs_for(
+            x_shape, w_shape, stride=cfg.stride, pad=cfg.pad,
+            groups=cfg.groups, dtype=dtype)
+        if wrec is not None:
+            wg = dict(tile_go=wrec["tile_go"],
+                      tile_cout=wrec["tile_cout"])
+    return ig, wg
+
+
+def _conv_grads(cfg: _ConvVjpConfig, x, w, bias, z, gy):
+    """Shared backward math: (dx, dw_logical, db_or_None, dz)."""
+    dz = _activation_bwd(cfg.activation, z, gy)
+    ig, wg = _backward_knobs(cfg, x.shape, w.shape, str(x.dtype))
+    dx = trim_conv2d_input_grad(dz, w, x_shape=x.shape, stride=cfg.stride,
+                                pad=cfg.pad, groups=cfg.groups, **ig)
+    dw = trim_conv2d_weight_grad(x, dz, kernel_size=w.shape[:2],
+                                 stride=cfg.stride, pad=cfg.pad,
+                                 groups=cfg.groups, **wg)
+    db = None if bias is None \
+        else dz.sum((0, 1, 2)).astype(bias.dtype)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db, dz
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv2d_vjp_core(cfg: _ConvVjpConfig, x, w, bias):
+    """Primal: the fully fused kernel (bias + activation in-epilogue)."""
+    return trim_conv2d(x, w, bias, stride=cfg.stride, pad=cfg.pad,
+                       tile_h=cfg.tile_h, tile_cout=cfg.tile_cout,
+                       groups=cfg.groups, activation=cfg.activation,
+                       dataflow=cfg.dataflow)
+
+
+def _conv2d_vjp_fwd(cfg: _ConvVjpConfig, x, w, bias):
+    z = trim_conv2d(x, w, bias, stride=cfg.stride, pad=cfg.pad,
+                    tile_h=cfg.tile_h, tile_cout=cfg.tile_cout,
+                    groups=cfg.groups, activation=None,
+                    dataflow=cfg.dataflow)
+    y = z if cfg.activation is None else ACTIVATIONS[cfg.activation](z)
+    # z is only a residual when the activation needs it in the backward
+    return y, (x, w, bias, z if cfg.activation is not None else None)
+
+
+def _conv2d_vjp_bwd(cfg: _ConvVjpConfig, res, gy):
+    x, w, bias, z = res
+    dx, dw, db, _ = _conv_grads(cfg, x, w, bias, z, gy)
+    return dx, dw, db
+
+
+_conv2d_vjp_core.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
+
+
+def _unpack_weights(wp: jax.Array, groups: int, cout: int) -> jax.Array:
+    """Packed padded layout -> logical (K, K, Cin/g, Cout)."""
+    kh, kw, cin_pg, gcpp = wp.shape
+    cpp, cout_pg = gcpp // groups, cout // groups
+    w = wp.reshape(kh, kw, cin_pg, groups, cpp)[..., :cout_pg]
+    return w.reshape(kh, kw, cin_pg, cout)
+
+
+def _pack_weight_grad(dw: jax.Array, groups: int, cpp: int) -> jax.Array:
+    """Logical weight cotangent -> the packed padded layout (the
+    cotangent of a PackedConv2dWeights.w leaf must match its shape)."""
+    kh, kw, cin_pg, cout = dw.shape
+    cout_pg = cout // groups
+    dwp = dw.reshape(kh, kw, cin_pg, groups, cout_pg)
+    dwp = jnp.pad(dwp, ((0, 0),) * 4 + ((0, cpp - cout_pg),))
+    return dwp.reshape(kh, kw, cin_pg, groups * cpp)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv2d_packed_vjp_core(cfg: _ConvVjpConfig, x, wp, bp):
+    """Primal: the fused packed-weights kernel path."""
+    return trim_conv2d(x, wp, bp, stride=cfg.stride, pad=cfg.pad,
+                       tile_h=cfg.tile_h, tile_cout=cfg.tile_cout,
+                       groups=cfg.groups, activation=cfg.activation,
+                       dataflow=cfg.dataflow, packed_cout=cfg.packed_cout)
+
+
+def _conv2d_packed_vjp_fwd(cfg: _ConvVjpConfig, x, wp, bp):
+    z = trim_conv2d(x, wp, bp, stride=cfg.stride, pad=cfg.pad,
+                    tile_h=cfg.tile_h, tile_cout=cfg.tile_cout,
+                    groups=cfg.groups, activation=None,
+                    dataflow=cfg.dataflow, packed_cout=cfg.packed_cout)
+    y = z if cfg.activation is None else ACTIVATIONS[cfg.activation](z)
+    return y, (x, wp, bp, z if cfg.activation is not None else None)
+
+
+def _conv2d_packed_vjp_bwd(cfg: _ConvVjpConfig, res, gy):
+    x, wp, bp, z = res
+    w = _unpack_weights(wp, cfg.groups, cfg.packed_cout)
+    dx, dw, _, dz = _conv_grads(cfg, x, w, None, z, gy)
+    cpp = wp.shape[3] // cfg.groups
+    dwp = _pack_weight_grad(dw, cfg.groups, cpp)
+    dbp = None
+    if bp is not None:
+        db = dz.sum((0, 1, 2))                     # logical (Cout,)
+        cout_pg = cfg.packed_cout // cfg.groups
+        dbp = jnp.pad(db.reshape(cfg.groups, cout_pg),
+                      ((0, 0), (0, cpp - cout_pg)))
+        dbp = dbp.reshape(1, cfg.groups * cpp).astype(bp.dtype)
+    return dx, dwp.astype(wp.dtype), dbp
+
+
+_conv2d_packed_vjp_core.defvjp(_conv2d_packed_vjp_fwd,
+                               _conv2d_packed_vjp_bwd)
+
+
 def conv2d(x: jax.Array, w, *, stride: int = 1,
            padding: str = "same", impl: str = "pallas",
            feature_group_count: int = 1, bias: jax.Array | None = None,
@@ -199,11 +368,13 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
                     else rec["tile_cout"]
                 dataflow = dataflow if dataflow is not None \
                     else rec["dataflow"]
-        return trim_conv2d(x, w, bias, stride=stride, pad=0,
-                           tile_h=tile_h, tile_cout=tile_cout,
-                           groups=feature_group_count,
-                           activation=activation,
-                           dataflow=dataflow or "carry")
+        cfg = _ConvVjpConfig(stride=stride, pad=0,
+                             groups=feature_group_count,
+                             activation=activation, tile_h=tile_h,
+                             tile_cout=tile_cout,
+                             dataflow=dataflow or "carry",
+                             use_autotune_cache=use_autotune_cache)
+        return _conv2d_vjp_core(cfg, x, w, bias)
     # Kernel tiling (paper §III): split K x K into sub-kernels, accumulate.
     # The epilogue is applied once, after the adder tree.  Explicit tile
     # knobs apply to every sub-kernel; the autotune cache is NOT consulted
@@ -212,13 +383,18 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
     h_out = (x.shape[1] - k) // stride + 1
     w_out = (x.shape[2] - k) // stride + 1
     out = None
+    cfg = _ConvVjpConfig(stride=stride, pad=0,
+                         groups=feature_group_count, activation=None,
+                         tile_h=tile_h, tile_cout=tile_cout,
+                         dataflow=dataflow or "carry",
+                         use_autotune_cache=use_autotune_cache)
     for r0, c0, kh, kw in subkernel_decomposition(k, native_k=3):
         zs = x[:, r0:r0 + (h_out - 1) * stride + kh,
                c0:c0 + (w_out - 1) * stride + kw, :]
-        part = trim_conv2d(zs, w[r0:r0 + kh, c0:c0 + kw], stride=stride,
-                           pad=0, tile_h=tile_h, tile_cout=tile_cout,
-                           groups=feature_group_count,
-                           dataflow=dataflow or "carry")
+        # each sub-kernel is a differentiable core call, so the whole
+        # adder-tree path (slices + sum) autodiffs through the same
+        # backward kernels
+        part = _conv2d_vjp_core(cfg, zs, w[r0:r0 + kh, c0:c0 + kw], None)
         out = part if out is None else out + part   # adder tree
     return ref.epilogue(out, bias, activation)
 
@@ -252,11 +428,13 @@ def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
             tile_h = tile_h if tile_h is not None else rec["tile_h"]
             dataflow = dataflow if dataflow is not None \
                 else rec["dataflow"]
-    return trim_conv2d(x, pk.w, pk.bias, stride=stride, pad=0,
-                       tile_h=tile_h, tile_cout=pk.tile_cout,
-                       groups=pk.groups, activation=activation,
-                       dataflow=dataflow or "carry",
-                       packed_cout=pk.cout)
+    cfg = _ConvVjpConfig(stride=stride, pad=0, groups=pk.groups,
+                         activation=activation, tile_h=tile_h,
+                         tile_cout=pk.tile_cout,
+                         dataflow=dataflow or "carry",
+                         use_autotune_cache=use_autotune_cache,
+                         packed_cout=pk.cout)
+    return _conv2d_packed_vjp_core(cfg, x, pk.w, pk.bias)
 
 
 def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,

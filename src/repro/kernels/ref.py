@@ -38,6 +38,39 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     return epilogue(y, bias, activation)
 
 
+def conv2d_grads(x: jax.Array, w: jax.Array, gy: jax.Array, *,
+                 stride: int = 1, padding: str = "same",
+                 feature_group_count: int = 1) -> tuple:
+    """Canonical (dx, dw) oracle: ``jax.vjp`` on the XLA convolution.
+
+    Every kernel gradient test compares against this single source —
+    the same ``lax.conv_general_dilated`` the forward oracle wraps.
+    """
+    def f(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding=padding.upper(),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=feature_group_count)
+    _, vjp = jax.vjp(f, x, w)
+    return vjp(gy)
+
+
+def conv2d_input_grad(x: jax.Array, w: jax.Array, gy: jax.Array, *,
+                      stride: int = 1, padding: str = "same",
+                      feature_group_count: int = 1) -> jax.Array:
+    """Input cotangent of the conv2d oracle."""
+    return conv2d_grads(x, w, gy, stride=stride, padding=padding,
+                        feature_group_count=feature_group_count)[0]
+
+
+def conv2d_weight_grad(x: jax.Array, w: jax.Array, gy: jax.Array, *,
+                       stride: int = 1, padding: str = "same",
+                       feature_group_count: int = 1) -> jax.Array:
+    """Weight cotangent of the conv2d oracle."""
+    return conv2d_grads(x, w, gy, stride=stride, padding=padding,
+                        feature_group_count=feature_group_count)[1]
+
+
 def depthwise_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
     """Causal depthwise conv1d oracle (Mamba / RG-LRU temporal conv).
 

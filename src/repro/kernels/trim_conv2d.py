@@ -40,6 +40,16 @@ TPU-native re-expression of the paper's dataflow (DESIGN.md §2, §4):
   (``ops.pack_conv2d_weights``), so the per-call pad/reshape in the hot
   path is skipped — the load-time packing of ``models/layers.py``.
 
+* **Backward kernels** (DESIGN.md §5).  Both conv cotangents are TrIM
+  convolutions: ``trim_conv2d_input_grad`` re-expresses dx as a
+  stride-1 forward problem (dilated/edge-padded cotangent x
+  flipped/transposed weights) through this very kernel — dataflow axis
+  included — and ``trim_conv2d_weight_grad`` is a dedicated kernel that
+  contracts the spatial axes: cotangent strips stay resident with their
+  overlapping ifmap window while the K x K taps accumulate into a
+  weight-shaped fp32 output block revisited across the (batch, strip)
+  sweep.  ``ops.conv2d`` wires them into a ``jax.custom_vjp``.
+
 All geometry (strips, carry, halo windows, grid, padded layouts) comes
 from ``core.conv_plan.ConvPlan`` — the same object that produces the
 analytical HBM traffic numbers, so the kernel and the model cannot
@@ -58,7 +68,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.conv_plan import ConvPlan
+from repro.core.conv_plan import ConvPlan, input_grad_geometry
 from repro.kernels.runtime import resolve_interpret
 
 ACTIVATIONS = {
@@ -303,6 +313,182 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         out = out[..., :cout_pg].reshape(plan.n, plan.h_out, plan.w_out,
                                          plan.cout)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (DESIGN.md §5) — both cotangents are TrIM convolutions
+# ---------------------------------------------------------------------------
+
+def make_weight_grad_plan(x_shape, w_shape, *, stride: int = 1,
+                          pad: int = 0, groups: int = 1,
+                          dtype_bytes: int = 4,
+                          tile_go: int | None = None,
+                          tile_cout: int | None = None):
+    """The exact plan :func:`trim_conv2d_weight_grad` executes."""
+    return ConvPlan.build_weight_grad(
+        x_shape, w_shape, stride=stride, pad=pad, groups=groups,
+        dtype_bytes=dtype_bytes, tile_go=tile_go, tile_cout=tile_cout)
+
+
+def transpose_conv_weights(w: jax.Array, groups: int = 1) -> jax.Array:
+    """Flip the spatial taps and swap the channel roles per group:
+    ``(KH, KW, Cin/g, Cout) -> (KH, KW, Cout/g, Cin)`` with the output
+    (= forward input) channels group-major — the weight tensor of the
+    input-gradient convolution."""
+    kh, kw, cin_pg, cout = w.shape
+    wt = w[::-1, ::-1].reshape(kh, kw, cin_pg, groups, cout // groups)
+    return wt.transpose(0, 1, 4, 3, 2).reshape(kh, kw, cout // groups,
+                                               groups * cin_pg)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x_shape", "stride", "pad", "groups", "tile_h", "tile_cout",
+    "dataflow", "interpret"))
+def trim_conv2d_input_grad(g: jax.Array, w: jax.Array, *,
+                           x_shape: tuple, stride: int = 1, pad: int = 0,
+                           groups: int = 1, tile_h: int | None = None,
+                           tile_cout: int | None = None,
+                           dataflow: str = "carry",
+                           interpret: bool | None = None) -> jax.Array:
+    """Input cotangent of ``trim_conv2d`` — itself a TrIM convolution.
+
+    g: (N, H_out, W_out, Cout) output cotangent; w: (KH, KW, Cin/g, Cout)
+    the forward weights; ``x_shape``/``stride``/``pad`` describe the
+    FORWARD problem.  The cotangent is stride-dilated, edge-padded by
+    ``K-1-pad`` (plus the ``(dim+2p-K) % s`` residual on the low edges'
+    opposite sides) and convolved at stride 1 with the flipped/transposed
+    weights through the ordinary forward kernel — dataflow/tile knobs and
+    traffic accounting apply unchanged (``ConvPlan.build_input_grad``).
+    Returns dx with shape ``x_shape``.
+    """
+    geo = input_grad_geometry(x_shape, w.shape, stride=stride, pad=pad,
+                              groups=groups)
+    if stride > 1:
+        gd = jnp.zeros(geo["g_dilated_shape"], g.dtype)
+        gd = gd.at[:, ::stride, ::stride, :].set(g)
+    else:
+        gd = g
+    gp = jnp.pad(gd, ((0, 0), geo["pad_h"], geo["pad_w"], (0, 0)))
+    wt = transpose_conv_weights(w, groups)
+    return trim_conv2d(gp, wt, stride=1, pad=0, tile_h=tile_h,
+                       tile_cout=tile_cout, groups=groups,
+                       dataflow=dataflow, interpret=interpret)
+
+
+def _weight_grad_kernel(x_ref, g_ref, o_ref, *, kh: int, kw: int,
+                        stride: int, tile_go: int, w_out: int):
+    """One grid step: strip of cotangent rows x its overlapping ifmap
+    window; the K x K taps are dense MXU matmuls accumulated into the
+    weight-shaped fp32 output block, which is revisited (and therefore
+    stays resident) across the sequential (batch, strip) sweep."""
+    ni = pl.program_id(2)
+    gs = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(ni == 0, gs == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    window = x_ref[0]                      # (window_rows, Wp, Cin/g)
+    cin = window.shape[-1]
+    s = stride
+    gv = g_ref[0].reshape(tile_go * w_out, -1)   # (TGo*Wo, TCout)
+    for ki in range(kh):
+        for kj in range(kw):
+            rows = window[ki: ki + (tile_go - 1) * s + 1: s,
+                          kj: kj + (w_out - 1) * s + 1: s, :]
+            acc = jnp.dot(rows.reshape(tile_go * w_out, cin).T, gv,
+                          preferred_element_type=jnp.float32)
+            o_ref[ki, kj] = o_ref[ki, kj] + acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kernel_size", "stride", "pad", "groups", "tile_go", "tile_cout",
+    "interpret"))
+def trim_conv2d_weight_grad(x: jax.Array, g: jax.Array, *,
+                            kernel_size: tuple, stride: int = 1,
+                            pad: int = 0, groups: int = 1,
+                            tile_go: int | None = None,
+                            tile_cout: int | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Weight cotangent of ``trim_conv2d`` — the conv of ifmap over
+    cotangent, with the spatial axes contracted.
+
+    x: (N, H, W, Cin) the forward input; g: (N, H_out, W_out, Cout) the
+    output cotangent; ``kernel_size`` = (KH, KW) of the forward weights
+    (not derivable from the shapes when ``(dim+2p-K) % s > 0``);
+    ``stride``/``pad``/``groups`` as in the forward call.
+    Returns dw with shape (KH, KW, Cin/groups, Cout) in ``x.dtype``.
+
+    All geometry comes from ``ConvPlan.build_weight_grad``; grouped /
+    depthwise problems run in the same single ``pallas_call`` (group is
+    a grid axis, exactly as in the forward kernel).
+    """
+    interpret = resolve_interpret(interpret)
+    n, h, w_in, cin = x.shape
+    _, h_out, w_out, cout = g.shape
+    kh, kw = kernel_size
+    if (h_out != (h + 2 * pad - kh) // stride + 1
+            or w_out != (w_in + 2 * pad - kw) // stride + 1):
+        raise ValueError(
+            f"cotangent shape {g.shape[1:3]} does not match the forward "
+            f"geometry of x={x.shape[1:3]} K=({kh}, {kw}) "
+            f"stride={stride} pad={pad}")
+    plan = make_weight_grad_plan(
+        x.shape, (kh, kw, cin // groups, cout), stride=stride, pad=pad,
+        groups=groups, dtype_bytes=x.dtype.itemsize, tile_go=tile_go,
+        tile_cout=tile_cout)
+
+    # --- layout: fold pad into HBM, round rows up to whole strips ----------
+    bottom = plan.x_rows_padded - h - pad
+    xp = jnp.pad(x, ((0, 0), (pad, max(bottom, 0)), (pad, pad), (0, 0)))
+    if bottom < 0:
+        xp = xp[:, :plan.x_rows_padded]
+    assert xp.shape == plan.padded_x_shape, (xp.shape, plan)
+
+    cpp, cout_pg = plan.cout_padded_per_group, plan.cout_per_group
+    gk = g.reshape(n, h_out, w_out, groups, cout_pg)
+    gk = jnp.pad(gk, ((0, 0), (0, plan.go_rows_padded - h_out), (0, 0),
+                      (0, 0), (0, cpp - cout_pg)))
+    gk = gk.reshape(plan.padded_g_shape)
+
+    co_tiles, cin_pg = plan.co_tiles, plan.cin_per_group
+    tgo_s = plan.tile_go * plan.stride
+    in_specs = [
+        # overlapping ifmap window of the strip's receptive field
+        # (element offsets: successive windows share KH - s rows)
+        pl.BlockSpec(plan.x_block,
+                     lambda gr, co, ni, gs: (ni, gs * tgo_s, 0,
+                                             gr * cin_pg),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec(plan.g_block,
+                     lambda gr, co, ni, gs: (ni, gs, 0,
+                                             gr * co_tiles + co)),
+    ]
+    kernel = functools.partial(
+        _weight_grad_kernel, kh=plan.kh, kw=plan.kw, stride=plan.stride,
+        tile_go=plan.tile_go, w_out=plan.w_out)
+
+    compiler_params = None
+    if not interpret:
+        # the weight-shaped output block accumulates across (N, strip):
+        # every axis is cross-step state -> all arbitrary
+        compiler_params = pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",) * 4)
+
+    dw_padded = pl.pallas_call(
+        kernel,
+        grid=plan.grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            plan.out_block,
+            lambda gr, co, ni, gs: (0, 0, 0, gr * co_tiles + co)),
+        out_shape=jax.ShapeDtypeStruct(plan.padded_out_shape, jnp.float32),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(xp, gk)
+
+    dw = dw_padded.reshape(kh, kw, cin_pg, groups, cpp)[..., :cout_pg]
+    return dw.reshape(kh, kw, cin_pg, cout).astype(x.dtype)
 
 
 def hbm_traffic_model(n, h, width, cin, cout, k, stride=1, pad=0,

@@ -222,6 +222,47 @@ def depthwise_separable_apply(p: dict, x: jax.Array, *, stride: int = 1,
     return conv2d_apply(p["pw"], h, activation=activation, impl=impl)
 
 
+def simple_cnn_params(*, cin: int = 3, channels=(8, 16), n_classes: int = 10,
+                      k: int = 3, depthwise_stage: bool = True) -> dict:
+    """A small CIFAR-shaped classifier running entirely on trim kernels.
+
+    Per stage: a stride-1 conv (fused ReLU) followed by a stride-2 conv
+    for downsampling — pooling as strided convolution keeps every op on
+    the differentiable Pallas path.  ``depthwise_stage`` inserts a
+    depthwise 3x3 before the last downsample so training exercises the
+    grouped backward kernels too.  The head is global mean pooling + a
+    dense projection.
+    """
+    p, prev = {}, cin
+    for i, c in enumerate(channels):
+        p[f"conv{i}"] = conv2d_params(k, prev, c)
+        p[f"down{i}"] = conv2d_params(k, c, c)
+        prev = c
+    if depthwise_stage:
+        p["dw"] = conv2d_params(k, prev, prev, groups=prev)
+    p["head"] = {"w": Param((prev, n_classes), (None, None)),
+                 "b": Param((n_classes,), (None,), init="zeros")}
+    return p
+
+
+def simple_cnn_apply(p: dict, x: jax.Array, *,
+                     impl: str = "pallas") -> jax.Array:
+    """Forward pass of :func:`simple_cnn_params`.  x: (N, H, W, Cin);
+    returns (N, n_classes) logits.  The depthwise stage is applied iff
+    the params carry one (inferred from the tree, like the stage
+    count)."""
+    n_stages = sum(1 for k in p if k.startswith("conv"))
+    for i in range(n_stages):
+        x = conv2d_apply(p[f"conv{i}"], x, activation="relu", impl=impl)
+        if "dw" in p and i == n_stages - 1:
+            x = conv2d_apply(p["dw"], x, groups=x.shape[-1],
+                             activation="relu", impl=impl)
+        x = conv2d_apply(p[f"down{i}"], x, stride=2, activation="relu",
+                         impl=impl)
+    x = x.mean(axis=(1, 2))                       # global mean pool
+    return x @ p["head"]["w"] + p["head"]["b"]
+
+
 # ---------------------------------------------------------------------------
 # Dense MLPs
 # ---------------------------------------------------------------------------

@@ -188,6 +188,111 @@ def test_depthwise_separable_pack_matches_unpacked():
     _allclose(got, want, tol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# Backward shapes (DESIGN.md §5): keys, tuning, and the bwd consultation
+# ---------------------------------------------------------------------------
+
+def test_backward_keys_never_collide_with_forward():
+    """The weight-grad record is op-namespaced, and the input-grad conv's
+    key is the transformed problem's own conv2d key — even a forward
+    problem with the *identical* raw shape tuple gets a different key
+    than the wgrad record, and writing one never shadows the other."""
+    fwd_key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    wgrad_key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0,
+                                  op="conv2d_wgrad")
+    assert fwd_key != wgrad_key
+    assert fwd_key.startswith("conv2d:")
+    assert wgrad_key.startswith("conv2d_wgrad:")
+    autotune.store(fwd_key, dict(tile_h=8, tile_cout=4, dataflow="carry"))
+    autotune.store(wgrad_key, dict(tile_go=2, tile_cout=3))
+    assert autotune.lookup(fwd_key)["tile_h"] == 8
+    assert autotune.lookup(wgrad_key)["tile_go"] == 2
+    # the input-grad conv of this problem keys a *different* conv2d shape
+    from repro.core.conv_plan import input_grad_geometry
+    geo = input_grad_geometry(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    ig_key = autotune.make_key(geo["g_padded_shape"], geo["wt_shape"],
+                               stride=1, pad=0)
+    assert ig_key != fwd_key
+
+
+def test_tune_backward_round_trip():
+    """tune_backward persists both records into the hermetic per-test
+    cache and they read back through the validated lookups."""
+    recs = autotune.tune_backward(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    assert set(recs) == {"input_grad", "weight_grad"}
+    assert recs["weight_grad"]["tile_go"] >= 1
+    wrec = autotune.weight_grad_knobs_for(X_SHAPE, W_SHAPE, stride=1,
+                                          pad=0)
+    assert wrec == recs["weight_grad"]
+    from repro.core.conv_plan import input_grad_geometry
+    geo = input_grad_geometry(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    irec = autotune.knobs_for(geo["g_padded_shape"], geo["wt_shape"],
+                              stride=1, pad=0)
+    assert irec == recs["input_grad"]
+    # survives dropping the in-process memo (on-disk round trip)
+    autotune.reset_memory_cache()
+    assert autotune.weight_grad_knobs_for(X_SHAPE, W_SHAPE) == wrec
+    # malformed wgrad records are rejected, not trusted
+    autotune.store(autotune.make_key(X_SHAPE, W_SHAPE,
+                                     op="conv2d_wgrad"),
+                   dict(tile_go="bad", tile_cout=1))
+    assert autotune.weight_grad_knobs_for(X_SHAPE, W_SHAPE) is None
+
+
+def test_weight_grad_candidates_fit_vmem():
+    plans = autotune.candidate_weight_grad_knobs(X_SHAPE, W_SHAPE)
+    assert plans
+    assert all(p.vmem_resident_bytes <= VMEM_BYTES for p in plans)
+    # the full-height cotangent strip (one sweep step per image) is
+    # always a candidate
+    assert any(p.go_tiles == 1 for p in plans)
+
+
+def test_backward_pass_uses_cached_knobs(monkeypatch):
+    """The conv backward consults both caches: the weight-grad kernel
+    under its conv2d_wgrad key, the input-grad conv under the conv2d
+    key of its transformed shapes."""
+    import jax
+    from repro.kernels import trim_conv2d as tc
+    x = jnp.asarray(RNG.standard_normal(X_SHAPE), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(W_SHAPE) * .3, jnp.float32)
+    autotune.store(autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0,
+                                     op="conv2d_wgrad"),
+                   dict(tile_go=3, tile_cout=6))
+    from repro.core.conv_plan import input_grad_geometry
+    geo = input_grad_geometry(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    autotune.store(autotune.make_key(geo["g_padded_shape"],
+                                     geo["wt_shape"], stride=1, pad=0),
+                   dict(tile_h=5, tile_cout=4, dataflow="halo",
+                        source="model"))
+
+    seen = {}
+    real_ig, real_wg = ops.trim_conv2d_input_grad, \
+        ops.trim_conv2d_weight_grad
+
+    def spy_ig(*a, **kw):
+        seen["ig"] = kw
+        return real_ig(*a, **kw)
+
+    def spy_wg(*a, **kw):
+        seen["wg"] = kw
+        return real_wg(*a, **kw)
+
+    monkeypatch.setattr(ops, "trim_conv2d_input_grad", spy_ig)
+    monkeypatch.setattr(ops, "trim_conv2d_weight_grad", spy_wg)
+    gx, gw = jax.grad(
+        lambda x, w: (ops.conv2d(x, w, padding="valid") ** 2).sum(),
+        argnums=(0, 1))(x, w)
+    assert (seen["ig"]["tile_h"], seen["ig"]["tile_cout"],
+            seen["ig"]["dataflow"]) == (5, 4, "halo")
+    assert (seen["wg"]["tile_go"], seen["wg"]["tile_cout"]) == (3, 6)
+    dx_ref, dw_ref = ref.conv2d_grads(
+        x, w, 2 * ref.conv2d(x, w, padding="valid"), stride=1,
+        padding="valid")
+    _allclose(gx, dx_ref, tol=1e-5)
+    _allclose(gw, dw_ref, tol=1e-5)
+
+
 def test_packed_params_pick_up_cached_plan():
     """Pack-time cache consultation: a tuned record fixes the packed
     tile_cout and rides along as tile_h/dataflow hints."""

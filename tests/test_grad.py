@@ -1,0 +1,273 @@
+"""Gradient tests for the differentiable conv path (DESIGN.md §5).
+
+``jax.grad`` of the trim ``ops.conv2d`` is compared against the same
+grad of the ``ref`` oracle across the stride/groups/dataflow/packed
+grid, the backward kernels against the canonical ``ref.conv2d_*_grad``
+vjp oracle, and one finite-difference spot check ties the whole chain
+to first principles.  Tolerance policy (f32): 1e-5 on the max-abs
+relative scale — both paths accumulate in fp32, so only summation order
+differs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.trim_conv2d import (trim_conv2d_input_grad,
+                                       trim_conv2d_weight_grad)
+from repro.models import layers
+from repro.models.base import init_params
+
+RNG = np.random.default_rng(13)
+TOL_F32 = 1e-5
+
+
+def _close(a, b, tol=TOL_F32):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    scale = float(np.abs(b).max()) + 1e-9
+    assert float(np.abs(a - b).max()) / scale < tol
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels vs the canonical vjp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w,cin,cout,k,s,pad,g", [
+    (8, 8, 4, 8, 3, 1, 0, 1),
+    (12, 10, 4, 8, 3, 2, 1, 1),      # (h+2p-k) % s != 0 residual
+    (11, 13, 6, 6, 5, 3, 2, 2),      # grouped, stride 3
+    (10, 10, 8, 8, 3, 2, 1, 8),      # depthwise strided
+    (9, 9, 4, 4, 1, 1, 0, 1),        # 1x1
+    (14, 9, 5, 7, 4, 2, 1, 1),       # even K
+])
+def test_backward_kernels_vs_oracle(h, w, cin, cout, k, s, pad, g):
+    x = jnp.asarray(RNG.standard_normal((2, h, w, cin)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((k, k, cin // g, cout)) * .3,
+                     jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    y = ref.conv2d(xp, wt, stride=s, padding="valid",
+                   feature_group_count=g)
+    gy = jnp.asarray(RNG.standard_normal(y.shape), jnp.float32)
+    dx_ref, dw_ref = ref.conv2d_grads(xp, wt, gy, stride=s,
+                                      padding="valid",
+                                      feature_group_count=g)
+    dx = trim_conv2d_input_grad(gy, wt, x_shape=xp.shape, stride=s,
+                                pad=0, groups=g)
+    dw = trim_conv2d_weight_grad(xp, gy, kernel_size=(k, k), stride=s,
+                                 pad=0, groups=g)
+    _close(dx, dx_ref)
+    _close(dw, dw_ref)
+
+
+@pytest.mark.parametrize("dataflow", ["carry", "halo"])
+def test_input_grad_dataflow_and_tiles(dataflow):
+    """The input-grad conv inherits the forward kernel's dataflow axis
+    and tile knobs."""
+    x = jnp.asarray(RNG.standard_normal((1, 16, 16, 4)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((3, 3, 4, 6)) * .3, jnp.float32)
+    y = ref.conv2d(x, wt, stride=2, padding="valid")
+    gy = jnp.asarray(RNG.standard_normal(y.shape), jnp.float32)
+    dx_ref = ref.conv2d_input_grad(x, wt, gy, stride=2, padding="valid")
+    dx = trim_conv2d_input_grad(gy, wt, x_shape=x.shape, stride=2, pad=0,
+                                dataflow=dataflow, tile_h=4, tile_cout=2)
+    _close(dx, dx_ref)
+
+
+def test_weight_grad_tile_knobs():
+    x = jnp.asarray(RNG.standard_normal((2, 14, 12, 4)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((3, 3, 4, 10)) * .3, jnp.float32)
+    y = ref.conv2d(x, wt, stride=2, padding="valid")
+    gy = jnp.asarray(RNG.standard_normal(y.shape), jnp.float32)
+    dw_ref = ref.conv2d_weight_grad(x, wt, gy, stride=2, padding="valid")
+    for tile_go, tile_cout in [(1, None), (3, 4), (None, 2)]:
+        dw = trim_conv2d_weight_grad(x, gy, kernel_size=(3, 3), stride=2,
+                                     pad=0, tile_go=tile_go,
+                                     tile_cout=tile_cout)
+        _close(dw, dw_ref)
+
+
+# ---------------------------------------------------------------------------
+# jax.grad(ops.conv2d) vs jax.grad(ref.conv2d) — the acceptance grid
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # h, w, cin, cout, k, s, padding, groups, activation, dataflow
+    (10, 10, 4, 8, 3, 1, "same", 1, None, None),
+    (10, 10, 4, 8, 3, 1, "same", 1, "relu", None),
+    (12, 9, 4, 8, 3, 2, "same", 1, "gelu", None),
+    (12, 12, 8, 8, 3, 2, "valid", 8, "silu", None),
+    (14, 14, 6, 9, 3, 1, "same", 3, None, "halo"),
+    (11, 11, 4, 4, 1, 1, "valid", 1, None, None),
+]
+
+
+@pytest.mark.parametrize("case", GRID)
+def test_grad_vs_ref_grid(case):
+    h, w, cin, cout, k, s, padding, g, act, df = case
+    x = jnp.asarray(RNG.standard_normal((2, h, w, cin)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((k, k, cin // g, cout)) * .3,
+                     jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((cout,)), jnp.float32)
+    kw = dict(stride=s, padding=padding, feature_group_count=g,
+              activation=act)
+
+    def loss_trim(x, wt, b):
+        extra = {"dataflow": df} if df else {}
+        return (ops.conv2d(x, wt, bias=b, **kw, **extra) ** 2).sum()
+
+    def loss_ref(x, wt, b):
+        return (ref.conv2d(x, wt, bias=b, **kw) ** 2).sum()
+
+    got = jax.grad(loss_trim, argnums=(0, 1, 2))(x, wt, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, wt, b)
+    for a, r in zip(got, want):
+        _close(a, r)
+
+
+def test_grad_kernel_tiled_large_k():
+    """K > MAX_NATIVE_K: the adder-tree path differentiates through each
+    sub-kernel's custom_vjp."""
+    x = jnp.asarray(RNG.standard_normal((1, 30, 30, 3)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((11, 11, 3, 4)) * .1, jnp.float32)
+
+    def loss(impl):
+        return lambda x, wt: (ops.conv2d(x, wt, stride=4,
+                                         padding="valid",
+                                         impl=impl) ** 2).sum()
+
+    got = jax.grad(loss("pallas"), argnums=(0, 1))(x, wt)
+    want = jax.grad(loss("ref"), argnums=(0, 1))(x, wt)
+    for a, r in zip(got, want):
+        _close(a, r, tol=1e-4)   # two extra accumulation layers
+
+
+def test_grad_packed_weights_matches_unpacked():
+    """Packed-weights vjp: cotangents arrive in the packed padded layout
+    and match the unpacked path after unpadding."""
+    x = jnp.asarray(RNG.standard_normal((1, 12, 12, 8)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((3, 3, 2, 12)) * .3, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((12,)), jnp.float32)
+    groups, cout = 4, 12
+    pk = ops.pack_conv2d_weights(wt, b, groups=groups, tile_cout=2)
+
+    def loss_pk(x, pk):
+        return (ops.conv2d(x, pk, activation="relu") ** 2).sum()
+
+    def loss_raw(x, wt, b):
+        return (ops.conv2d(x, wt, bias=b, feature_group_count=groups,
+                           activation="relu") ** 2).sum()
+
+    dx, dpk = jax.grad(loss_pk, argnums=(0, 1))(x, pk)
+    dxr, dwr, dbr = jax.grad(loss_raw, argnums=(0, 1, 2))(x, wt, b)
+    _close(dx, dxr)
+    assert dpk.w.shape == pk.w.shape and dpk.bias.shape == pk.bias.shape
+    _close(ops._unpack_weights(dpk.w, groups, cout), dwr)
+    cpp = pk.w.shape[3] // groups
+    db = dpk.bias.reshape(groups, cpp)[:, :cout // groups].reshape(-1)
+    _close(db, dbr)
+
+
+def test_grad_depthwise_helper():
+    x = jnp.asarray(RNG.standard_normal((1, 10, 10, 6)), jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((3, 3, 1, 6)) * .3, jnp.float32)
+
+    def loss(impl):
+        return lambda x, wt: (ops.depthwise_conv2d(x, wt, stride=2,
+                                                   impl=impl) ** 2).sum()
+
+    got = jax.grad(loss("pallas"), argnums=(0, 1))(x, wt)
+    want = jax.grad(loss("ref"), argnums=(0, 1))(x, wt)
+    for a, r in zip(got, want):
+        _close(a, r)
+
+
+def test_grad_bf16_tolerance_policy():
+    """The DESIGN.md §5 dtype policy: bf16 gradients track the f32
+    oracle to 3e-2 (the inter-layer bf16 cast dominates; both backward
+    kernels still accumulate fp32)."""
+    x32 = jnp.asarray(RNG.standard_normal((1, 12, 12, 6)), jnp.float32)
+    w32 = jnp.asarray(RNG.standard_normal((3, 3, 6, 8)) * .3, jnp.float32)
+
+    def loss(fn, dt):
+        return lambda x, w: (fn(x.astype(dt), w.astype(dt),
+                                stride=2, padding="same")
+                             .astype(jnp.float32) ** 2).sum()
+
+    got = jax.grad(loss(ops.conv2d, jnp.bfloat16), argnums=(0, 1))(
+        x32, w32)
+    want = jax.grad(loss(ref.conv2d, jnp.float32), argnums=(0, 1))(
+        x32, w32)
+    for a, r in zip(got, want):
+        _close(a, r, tol=3e-2)
+
+
+def test_weight_grad_rejects_mismatched_cotangent():
+    x = jnp.asarray(RNG.standard_normal((1, 10, 10, 4)), jnp.float32)
+    bad_gy = jnp.zeros((1, 5, 5, 8), jnp.float32)   # wrong for s=1 K=3
+    with pytest.raises(ValueError, match="does not match"):
+        trim_conv2d_weight_grad(x, bad_gy, kernel_size=(3, 3), stride=1,
+                                pad=0)
+
+
+def test_finite_difference_spot_check():
+    """First-principles anchor: directional derivative via central
+    differences on the scalar loss."""
+    x = jnp.asarray(RNG.standard_normal((1, 8, 8, 3)), jnp.float64
+                    if jax.config.jax_enable_x64 else jnp.float32)
+    wt = jnp.asarray(RNG.standard_normal((3, 3, 3, 4)) * .3, jnp.float32)
+
+    def loss(wt):
+        return (ops.conv2d(x, wt, stride=2, padding="same") ** 2).sum()
+
+    g = jax.grad(loss)(wt)
+    v = jnp.asarray(RNG.standard_normal(wt.shape), jnp.float32)
+    v = v / jnp.linalg.norm(v)
+    eps = 1e-2
+    fd = (loss(wt + eps * v) - loss(wt - eps * v)) / (2 * eps)
+    analytic = jnp.vdot(g, v)
+    assert abs(float(fd - analytic)) / (abs(float(analytic)) + 1e-9) \
+        < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: a tiny CNN training step on trim kernels learns
+# ---------------------------------------------------------------------------
+
+def test_cnn_train_step_decreases_loss():
+    """The examples/train_cnn.py loop in miniature: grads flow through
+    stacked strided/depthwise trim convs and reduce the loss."""
+    from repro.optim import AdamWConfig, adamw
+    rng = np.random.default_rng(0)
+    templates = rng.standard_normal((4, 12, 12, 3))
+    params = init_params(
+        layers.simple_cnn_params(cin=3, channels=(6,), n_classes=4),
+        jax.random.PRNGKey(0))
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=2, decay_steps=100,
+                      weight_decay=0.0)
+    moments = adamw.init_moments(params, cfg)
+
+    def loss_fn(p, x, y):
+        logits = layers.simple_cnn_apply(p, x)
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                    y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, m, i, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, m, _ = adamw.apply_updates(p, grads, m, i, cfg)
+        return p, m, loss
+
+    losses = []
+    for i in range(12):
+        labels = rng.integers(0, 4, size=8)
+        x = jnp.asarray(templates[labels]
+                        + 0.3 * rng.standard_normal((8, 12, 12, 3)),
+                        jnp.float32)
+        params, moments, loss = step(params, moments, jnp.int32(i), x,
+                                     jnp.asarray(labels, jnp.int32))
+        losses.append(float(loss))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.05, losses

@@ -1,0 +1,244 @@
+"""Property-based test layer over the conv subsystem.
+
+Hypothesis strategies sample (H, W, K, stride, pad, groups, dataflow)
+geometries and assert the ConvPlan invariants the hand-picked edge list
+used to spot-check one by one:
+
+  * the Pallas grid covers the output exactly (no output row/channel
+    unassigned, none computed twice);
+  * "trim" (halo) accounting never moves fewer input bytes than
+    "3dtrim" (carry) accounting;
+  * padded layouts round-trip (padded rows == strips * tile_h ==
+    h + pad + pad_bottom; the halo window is the strip plus K-1 rows);
+  * backward geometry round-trips: the input-grad conv lands exactly
+    back on the input shape, the weight-grad plan's windows cover every
+    tap of every cotangent row;
+
+and that the kernels agree with the oracle (forward AND both gradients)
+on the sampled geometries.  Runs under real hypothesis when installed,
+else under the conftest fallback as a deterministic random sweep.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conv_plan import (ConvPlan, WeightGradPlan,
+                                  input_grad_geometry)
+from repro.kernels import ops, ref
+from repro.kernels.trim_conv2d import (trim_conv2d, trim_conv2d_input_grad,
+                                       trim_conv2d_weight_grad)
+
+
+def _close(a, b, tol=2e-3):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    scale = float(np.abs(b).max()) + 1e-9
+    assert float(np.abs(a - b).max()) / scale < tol
+
+
+def _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg):
+    """Build a valid sampled geometry or None (too-small inputs)."""
+    pad = int(pad_frac * (k - 1) + 0.5)        # 0 <= pad <= k-1
+    if h + 2 * pad < k or w + 2 * pad < k:
+        return None
+    cin = cin_pg * groups
+    cout = cout_pg * groups
+    return dict(h=h, w=w, k=k, stride=stride, pad=pad, groups=groups,
+                cin=cin, cout=cout)
+
+
+# ---------------------------------------------------------------------------
+# ConvPlan invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(h=st.integers(4, 40), w=st.integers(4, 40),
+       k=st.sampled_from([1, 2, 3, 4, 5, 7]),
+       stride=st.sampled_from([1, 2, 3]),
+       pad_frac=st.floats(min_value=0.0, max_value=1.0),
+       groups=st.sampled_from([1, 2, 4]),
+       cin_pg=st.integers(1, 6), cout_pg=st.integers(1, 6),
+       tile_h_mult=st.integers(1, 6),
+       dataflow=st.sampled_from(["carry", "halo"]))
+def test_conv_plan_invariants(h, w, k, stride, pad_frac, groups, cin_pg,
+                              cout_pg, tile_h_mult, dataflow):
+    geo = _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg)
+    if geo is None:
+        return
+    try:
+        plan = ConvPlan.build(
+            (1, geo["h"], geo["w"], geo["cin"]),
+            (k, k, cin_pg, geo["cout"]), stride=stride, pad=geo["pad"],
+            groups=groups, tile_h=tile_h_mult * stride,
+            dataflow=dataflow)
+    except ValueError:
+        return                                  # empty output etc.
+
+    # grid covers the output exactly
+    n, g, strips, co = plan.grid
+    assert (n, g) == (1, groups)
+    assert strips == plan.g_tiles and co == plan.co_tiles
+    assert strips * plan.th_out >= plan.h_out + plan.delta
+    assert (strips - 1) * plan.th_out < plan.h_out + plan.delta
+    assert co * plan.tile_cout >= plan.cout_per_group
+    assert (co - 1) * plan.tile_cout < plan.cout_per_group
+
+    # padded shapes round-trip
+    assert plan.rows_padded == strips * plan.tile_h
+    assert plan.rows_padded == plan.h + plan.pad + plan.pad_bottom
+    assert plan.padded_input_shape == (1, plan.rows_padded, plan.wp,
+                                       plan.cin)
+    assert plan.halo_in_block[1] == plan.tile_h + k - 1
+    assert plan.halo_padded_input_shape[1] == plan.rows_padded + k - 1
+    assert plan.padded_output_shape[1] >= plan.delta + plan.h_out
+    # the strip window always reaches the taps of its last output row
+    assert plan.wp >= (plan.w_out - 1) * stride + k
+
+    # halo accounting never moves fewer bytes than carry accounting
+    trim = plan.hbm_bytes("trim")
+    shadow = plan.hbm_bytes("3dtrim")
+    assert trim["input"] >= shadow["input"]
+    assert trim["total"] >= shadow["total"]
+    assert shadow["overhead_pct"] == 0.0
+    assert plan.halo_rows("trim") == (plan.g_tiles - 1) * (k - 1)
+    # the plan's own dataflow accounting maps carry->3dtrim, halo->trim
+    assert plan.hbm_bytes() == (shadow if dataflow == "carry" else trim)
+    assert plan.arithmetic_intensity() > 0
+    assert plan.flops == 2 * plan.macs
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=st.integers(4, 32), w=st.integers(4, 32),
+       k=st.sampled_from([1, 2, 3, 5]), stride=st.sampled_from([1, 2, 3]),
+       pad_frac=st.floats(min_value=0.0, max_value=1.0),
+       groups=st.sampled_from([1, 2, 3]),
+       cin_pg=st.integers(1, 5), cout_pg=st.integers(1, 5),
+       tile_go=st.integers(1, 8))
+def test_backward_plan_invariants(h, w, k, stride, pad_frac, groups,
+                                  cin_pg, cout_pg, tile_go):
+    geo = _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg)
+    if geo is None:
+        return
+    x_shape = (2, geo["h"], geo["w"], geo["cin"])
+    w_shape = (k, k, cin_pg, geo["cout"])
+    s, pad = stride, geo["pad"]
+
+    # input-grad geometry round-trips onto the input shape
+    igeo = input_grad_geometry(x_shape, w_shape, stride=s, pad=pad,
+                               groups=groups)
+    gh = igeo["g_padded_shape"][1]
+    gw = igeo["g_padded_shape"][2]
+    assert gh - k + 1 == geo["h"] and gw - k + 1 == geo["w"]
+    ig_plan = ConvPlan.build_input_grad(x_shape, w_shape, stride=s,
+                                        pad=pad, groups=groups)
+    assert ig_plan.stride == 1 and ig_plan.pad == 0
+    assert ig_plan.h_out == geo["h"] and ig_plan.w_out == geo["w"]
+    assert (ig_plan.cin, ig_plan.cout) == (geo["cout"], geo["cin"])
+
+    # weight-grad windows cover every tap of every cotangent row
+    wg = ConvPlan.build_weight_grad(x_shape, w_shape, stride=s, pad=pad,
+                                    groups=groups, tile_go=tile_go)
+    assert isinstance(wg, WeightGradPlan)
+    assert wg.go_tiles * wg.tile_go >= wg.h_out
+    assert (wg.go_tiles - 1) * wg.tile_go < wg.h_out
+    assert wg.window_rows == (wg.tile_go - 1) * s + k
+    # last strip's window ends exactly at the padded ifmap bottom
+    assert (wg.go_tiles - 1) * wg.tile_go * s + wg.window_rows \
+        == wg.x_rows_padded
+    assert wg.wp >= (wg.w_out - 1) * s + k
+    # the weight grad mirrors the forward MAC count exactly
+    fwd = ConvPlan.build(x_shape, w_shape, stride=s, pad=pad,
+                         groups=groups)
+    assert wg.macs == fwd.macs
+    assert wg.hbm_bytes()["total"] > 0
+    assert wg.vmem_resident_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Kernels vs oracle on sampled geometries
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(5, 20), w=st.integers(5, 20),
+       k=st.sampled_from([1, 2, 3, 4, 5]),
+       stride=st.sampled_from([1, 2, 3]),
+       pad_frac=st.floats(min_value=0.0, max_value=1.0),
+       groups=st.sampled_from([1, 2, 4]),
+       cin_pg=st.integers(1, 4), cout_pg=st.integers(1, 4),
+       dataflow=st.sampled_from(["carry", "halo"]),
+       seed=st.integers(0, 2 ** 16))
+def test_conv2d_matches_ref_on_sampled_geometries(
+        h, w, k, stride, pad_frac, groups, cin_pg, cout_pg, dataflow,
+        seed):
+    geo = _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg)
+    if geo is None:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, geo["h"], geo["w"],
+                                         geo["cin"])), jnp.float32)
+    wt = jnp.asarray(
+        rng.standard_normal((k, k, cin_pg, geo["cout"])) * .3,
+        jnp.float32)
+    pad = geo["pad"]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    got = trim_conv2d(xp, wt, stride=stride, pad=0, groups=groups,
+                      dataflow=dataflow)
+    want = ref.conv2d(xp, wt, stride=stride, padding="valid",
+                      feature_group_count=groups)
+    assert got.shape == want.shape
+    _close(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(h=st.integers(5, 16), w=st.integers(5, 16),
+       k=st.sampled_from([1, 2, 3, 4]), stride=st.sampled_from([1, 2]),
+       pad_frac=st.floats(min_value=0.0, max_value=1.0),
+       groups=st.sampled_from([1, 2]),
+       cin_pg=st.integers(1, 4), cout_pg=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_gradients_match_ref_on_sampled_geometries(
+        h, w, k, stride, pad_frac, groups, cin_pg, cout_pg, seed):
+    geo = _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg)
+    if geo is None:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, geo["h"], geo["w"],
+                                         geo["cin"])), jnp.float32)
+    wt = jnp.asarray(
+        rng.standard_normal((k, k, cin_pg, geo["cout"])) * .3,
+        jnp.float32)
+    pad = geo["pad"]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    y = ref.conv2d(xp, wt, stride=stride, padding="valid",
+                   feature_group_count=groups)
+    gy = jnp.asarray(rng.standard_normal(y.shape), jnp.float32)
+    dx_ref, dw_ref = ref.conv2d_grads(xp, wt, gy, stride=stride,
+                                      padding="valid",
+                                      feature_group_count=groups)
+    dx = trim_conv2d_input_grad(gy, wt, x_shape=xp.shape, stride=stride,
+                                pad=0, groups=groups)
+    dw = trim_conv2d_weight_grad(xp, gy, kernel_size=(k, k),
+                                 stride=stride, pad=0, groups=groups)
+    _close(dx, dx_ref, tol=1e-5)
+    _close(dw, dw_ref, tol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(6, 20), w=st.integers(6, 20), cin=st.integers(1, 6),
+       cout=st.integers(1, 6), k=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]),
+       padding=st.sampled_from(["same", "valid"]),
+       seed=st.integers(0, 2 ** 16))
+def test_ops_conv2d_matches_ref_on_sampled_geometries(
+        h, w, cin, cout, k, stride, padding, seed):
+    """The public ops.conv2d entry (autotune default path included)."""
+    if padding == "valid" and (h < k or w < k):
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, h, w, cin)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * .3,
+                     jnp.float32)
+    _close(ops.conv2d(x, wt, stride=stride, padding=padding),
+           ref.conv2d(x, wt, stride=stride, padding=padding))
