@@ -38,6 +38,7 @@ import glob
 import json
 import os
 import subprocess
+import sys
 import time
 
 import numpy as np
@@ -237,6 +238,64 @@ def bench_train_step(emit):
          f"{total.dominant}")
 
 
+def bench_sharded(emit):
+    """Sharded conv (DESIGN.md §6) on 1/2/4/8-device meshes: modeled
+    ShardedConvPlan traffic (HBM terms + the cross-device halo-exchange
+    bytes as a first-class roofline term) against the measured step time
+    of the shard_map halo-exchange path on forced host CPU devices.  At
+    shards=1 the plan terms reduce exactly to the single-device ConvPlan
+    numbers (asserted here, emitted as shard_plan_reduction_d1)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.conv_plan import ConvPlan
+    from repro.core.conv_shard import ShardedConvPlan
+    from repro.core.roofline import sharded_conv_roofline
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    n, h, w_img, cin, cout, k = 8, 32, 32, 8, 16, 3
+    x = jnp.asarray(rng.standard_normal((n, h, w_img, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * .2,
+                    jnp.float32)
+    # the kernel-seen shape ('same' K=3 s=1 pre-pads by 1 per side) —
+    # the shape the plans and autotune keys are built over
+    kshape, _ = ops.kernel_input_shape(x.shape, k, 1, "same")
+    base = ConvPlan.build(kshape, w.shape)
+
+    n_avail = jax.device_count()
+    for ndev in (1, 2, 4, 8):
+        plan = ShardedConvPlan.build(kshape, w.shape, spatial_shards=ndev)
+        t = plan.sharded_traffic()
+        terms = sharded_conv_roofline(f"shard_d{ndev}", plan)
+        if ndev == 1:
+            bt = base.hbm_bytes()
+            exact = (t["halo"] == 0 and t["total"] == bt["total"]
+                     and t["input"] == bt["input"])
+            assert exact, (t, bt)
+            emit("shard_plan_reduction_d1", 0.0,
+                 f"halo=0B|matches_convplan={exact}")
+        if ndev > n_avail:
+            emit(f"shard_conv2d_d{ndev}", 0.0,
+                 f"halo={t['halo']}B|skipped(devices={n_avail})")
+            continue
+        from repro.launch.mesh import make_conv_mesh
+        mesh = make_conv_mesh(1, ndev)
+
+        def call():
+            ops.conv2d(x, w, mesh=mesh,
+                       use_autotune_cache=False).block_until_ready()
+
+        us = _time(call)
+        # halo = the modeled fwd+vjp round trip; the measured time is
+        # forward-only, whose wire cost is halo_fwd (one direction)
+        emit(f"shard_conv2d_d{ndev}", us,
+             f"halo={t['halo']}B|halo_fwd={plan.halo_bytes_oneway}B|"
+             f"hbm={t['hbm_total']}B|"
+             f"halo_per_dev={plan.halo_bytes_per_device:.0f}B|"
+             f"t_coll={terms.t_collective * 1e6:.2f}us|"
+             f"dom={terms.dominant}")
+
+
 def bench_roofline(emit):
     path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                         "dryrun_matrix.json")
@@ -272,10 +331,21 @@ def main() -> None:
     ap.add_argument("--train", action="store_true",
                     help="only the training-step benches (the training "
                          "perf artifact CI uploads)")
+    ap.add_argument("--shard", action="store_true",
+                    help="only the sharded-conv benches: modeled halo "
+                         "bytes vs measured step time on 1/2/4/8-device "
+                         "meshes (forces 8 host CPU devices)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows as JSON (+ git rev) for the "
                          "perf-trajectory artifact")
     args = ap.parse_args()
+    if args.shard:
+        # must precede the first jax import in this process (bench
+        # functions import jax lazily for exactly this reason)
+        assert "jax" not in sys.modules, \
+            "--shard needs to set XLA_FLAGS before jax initializes"
+        from repro.launch.hostdevices import force_host_device_count
+        force_host_device_count(8)
     print("name,us_per_call,derived")
     rows = []
 
@@ -283,7 +353,9 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         rows.append(dict(name=name, us=round(us, 1), derived=derived))
 
-    if args.train:
+    if args.shard:
+        bench_sharded(emit)
+    elif args.train:
         bench_train_step(emit)
     elif args.smoke:
         bench_fig1(emit)
@@ -301,7 +373,8 @@ def main() -> None:
         bench_roofline(emit)
     if args.json:
         payload = dict(rev=_git_rev(), smoke=args.smoke,
-                       mode=("train" if args.train
+                       mode=("shard" if args.shard
+                             else "train" if args.train
                              else "smoke" if args.smoke else "full"),
                        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
                        rows=rows)

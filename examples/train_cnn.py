@@ -14,7 +14,16 @@ The task is synthetic but learnable: each class has a fixed random
 template, samples are noisy mixtures, labels the template index.  Loss
 must drop over 50 steps — the training acceptance criterion.
 
+Data + spatial parallelism (DESIGN.md §6): ``--devices N --data D
+--spatial S`` forces N host CPU devices and runs every conv through the
+``shard_map`` halo-exchange path — images shard over the 'data' axis,
+output H-strips over 'model', with the K-1 boundary rows exchanged by
+``ppermute`` before each per-shard kernel (gradients transpose the
+shuffle and psum the weight cotangents).
+
   PYTHONPATH=src python examples/train_cnn.py [--steps 50] [--json OUT]
+  PYTHONPATH=src python examples/train_cnn.py --devices 4 --data 2 \
+      --spatial 2 --steps 20
 """
 
 import argparse
@@ -26,6 +35,11 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("REPRO_CONVTUNE_CACHE", os.path.join(
     os.path.dirname(__file__), "..", "artifacts", "convtune.json"))
+
+# --devices N must take effect before the first jax import (XLA reads
+# the host-device flag at initialization; hostdevices is jax-free)
+from repro.launch.hostdevices import force_host_device_count_from_argv
+force_host_device_count_from_argv()
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +64,8 @@ def make_batch(rng: np.random.Generator, templates: np.ndarray,
     return jnp.asarray(x, jnp.float32), jnp.asarray(labels, jnp.int32)
 
 
-def loss_fn(params, x, y):
-    logits = layers.simple_cnn_apply(params, x)
+def loss_fn(params, x, y, mesh=None):
+    logits = layers.simple_cnn_apply(params, x, mesh=mesh)
     logp = jax.nn.log_softmax(logits)
     return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
 
@@ -81,7 +95,22 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--json", default=None, metavar="OUT.json")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="force N host CPU devices (handled pre-import)")
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel shards (images over 'data')")
+    ap.add_argument("--spatial", type=int, default=1,
+                    help="spatial shards (output H-strips over 'model')")
     args = ap.parse_args()
+    mesh = None
+    if args.data * args.spatial > 1:
+        from repro.launch.mesh import make_conv_mesh
+        mesh = make_conv_mesh(args.data, args.spatial)
+        if args.batch % args.data:
+            raise SystemExit(f"--batch {args.batch} must divide over "
+                             f"--data {args.data}")
+        print(f"mesh: {args.data} x {args.spatial} devices "
+              f"(data x spatial), convs on the shard_map halo path")
 
     rng = np.random.default_rng(0)
     templates = rng.standard_normal((N_CLASSES, IMAGE, IMAGE, CIN))
@@ -94,12 +123,15 @@ def main() -> None:
                           weight_decay=0.0)
     moments = adamw.init_moments(params, opt_cfg)
 
-    print("tuning backward conv shapes (persisted plan cache) ...")
-    tune_backward_shapes(args.batch)
+    if mesh is None:
+        print("tuning backward conv shapes (persisted plan cache) ...")
+        tune_backward_shapes(args.batch)
 
     @jax.jit
     def train_step(params, moments, step, x, y):
-        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        # mesh rides as a closure constant (it is not a jax type)
+        loss, grads = jax.value_and_grad(
+            lambda p, xb, yb: loss_fn(p, xb, yb, mesh))(params, x, y)
         params, moments, metrics = adamw.apply_updates(
             params, grads, moments, step, opt_cfg)
         return params, moments, loss, metrics

@@ -5,6 +5,9 @@ from repro.core.conv_plan import (  # noqa: F401
     ConvPlan, Conv1dPlan, WeightGradPlan, input_grad_geometry,
     slice_reads_per_channel,
 )
+from repro.core.conv_shard import (  # noqa: F401
+    ShardedConvPlan, resolve_conv_mesh,
+)
 from repro.core.model import (  # noqa: F401
     ConvLayer, HWConfig, TRIM, TRIM_3D,
     ifmap_reads_per_channel, ifmap_overhead_pct, fig1_curve,

@@ -359,6 +359,92 @@ def tune_weight_grad(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
     return record
 
 
+# ---------------------------------------------------------------------------
+# Sharded shapes (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def sharded_key_op(batch_shards: int, spatial_shards: int) -> str:
+    """The op namespace of a sharded conv record:
+    ``conv2d_shard:<ndev>:b<bs>x<ss>`` — the device count AND the
+    (batch, spatial) split are part of the namespace because both change
+    the per-shard strip geometry: a knob tuned on one shard grid must
+    never be served to another split of the same size, to a different
+    mesh size, or to the single-device path."""
+    ndev = int(batch_shards) * int(spatial_shards)
+    return (f"conv2d_shard:{ndev}:"
+            f"b{int(batch_shards)}x{int(spatial_shards)}")
+
+
+def sharded_knobs_for(x_shape, w_shape, *, batch_shards: int = 1,
+                      spatial_shards: int = 1, stride: int = 1,
+                      pad: int = 0, groups: int = 1,
+                      dtype: str = "float32", backend: str | None = None,
+                      path: str | None = None) -> dict | None:
+    """Cached (validated) knobs for one sharded conv problem, or None —
+    the lookup the ``ops.conv2d(..., mesh=)`` path performs.  Keys are
+    the *global* kernel-seen shape under the shard-grid namespace of
+    :func:`sharded_key_op`.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
+    if os.environ.get(AUTOTUNE_ENV, "1") == "0":
+        return None
+    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                          groups=groups, dtype=dtype, backend=backend,
+                          op=sharded_key_op(batch_shards, spatial_shards)),
+                 path)
+    if rec is not None and _valid_record(rec, stride):
+        return rec
+    return None
+
+
+def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
+                 spatial_shards: int = 1, stride: int = 1, pad: int = 0,
+                 groups: int = 1, dtype: str = "float32",
+                 dtype_bytes: int = 4, backend: str | None = None,
+                 write: bool = True, path: str | None = None) -> dict:
+    """Tune one *sharded* conv problem and (by default) persist the
+    winner under its ``conv2d_shard:<ndev>`` key.
+
+    Candidates are the VMEM-feasible knobs of the *per-shard* problem
+    (the assembled local window — device count changes the strip
+    geometry, which is why sharded records are namespaced), scored by
+    the sharded roofline: ``max(T_comp, T_mem, T_collective)`` with the
+    cross-device halo bytes on the collective term.
+    """
+    from repro.core.conv_shard import ShardedConvPlan
+    from repro.core.roofline import sharded_conv_roofline
+    base = ShardedConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
+                                 groups=groups, dtype_bytes=dtype_bytes,
+                                 batch_shards=batch_shards,
+                                 spatial_shards=spatial_shards)
+    local = candidate_knobs(base.local_x_shape, w_shape, stride=stride,
+                            pad=0, groups=groups, dtype_bytes=dtype_bytes)
+    if not local:
+        raise ValueError(f"no feasible sharded candidates for "
+                         f"{x_shape}/{w_shape}")
+    plans = [ShardedConvPlan.build(
+        x_shape, w_shape, stride=stride, pad=pad, groups=groups,
+        dtype_bytes=dtype_bytes, tile_h=p.tile_h, tile_cout=p.tile_cout,
+        dataflow=p.dataflow, batch_shards=batch_shards,
+        spatial_shards=spatial_shards) for p in local]
+
+    def score(p):
+        terms = sharded_conv_roofline("tune", p)
+        return (terms.step_time_s, p.sharded_traffic()["total"],
+                0 if p.dataflow == "halo" else 1,
+                p.local_plan().g_tiles, p.tile_cout)
+
+    best = min(plans, key=score)
+    record = dict(tile_h=best.tile_h, tile_cout=best.tile_cout,
+                  dataflow=best.dataflow, source="model",
+                  model_step_time_s=sharded_conv_roofline(
+                      "tune", best).step_time_s, measured_us=None)
+    if write:
+        store(make_key(x_shape, w_shape, stride=stride, pad=pad,
+                       groups=groups, dtype=dtype, backend=backend,
+                       op=sharded_key_op(batch_shards, spatial_shards)),
+              record, path)
+    return record
+
+
 def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                   groups: int = 1, dtype: str = "float32",
                   dtype_bytes: int = 4, backend: str | None = None,

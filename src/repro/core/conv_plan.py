@@ -142,8 +142,20 @@ class ConvPlan:
             raise ValueError(
                 f"tile_h={self.tile_h} must be a multiple of the stride "
                 f"{self.stride}")
+        if self.tile_h < 1 or self.tile_cout < 1:
+            raise ValueError(
+                f"tile_h={self.tile_h} / tile_cout={self.tile_cout} "
+                "must be >= 1")
         if self.h_out < 1 or self.w_out < 1:
             raise ValueError("empty output: input smaller than kernel")
+        # Canonicalize oversized strips (DESIGN.md §6): any tile_h beyond
+        # the full-height strip (one strip covering h_out + delta output
+        # rows) is clamped to it, so plans built with tile_h > H_out are
+        # identical — same padding, same grid, same traffic — instead of
+        # billing/padding ever more rows that neither dataflow reads.
+        full = (self.h_out + self.delta) * self.stride
+        if self.tile_h > full:
+            object.__setattr__(self, "tile_h", full)
 
     # -- construction ------------------------------------------------------
 
@@ -566,6 +578,10 @@ class WeightGradPlan:
             raise ValueError(f"tile_go={self.tile_go} must be >= 1")
         if self.h_out < 1 or self.w_out < 1:
             raise ValueError("empty output: input smaller than kernel")
+        # same canonical clamp as ConvPlan.tile_h: a cotangent strip
+        # taller than the whole cotangent is the full-height strip
+        if self.tile_go > self.h_out:
+            object.__setattr__(self, "tile_go", self.h_out)
 
     # -- problem geometry --------------------------------------------------
 

@@ -1,0 +1,279 @@
+"""Sharded TrIM convolution planning (DESIGN.md §6).
+
+3D-TrIM's thesis is that the K-1 row overlap between compute slices
+should be explicit and minimized — on chip, the shadow registers carry it
+between strips for free.  The multi-device analogue is spatial sharding:
+each device owns an H-strip of the ifmap, and the same K-1 boundary rows
+become *real* inter-chip traffic, exchanged between neighbors before the
+per-shard kernel runs.  :class:`ShardedConvPlan` extends
+:class:`~repro.core.conv_plan.ConvPlan` with exactly that accounting:
+
+* **Mesh axis mapping** — ``batch -> batch_axis`` (data parallelism over
+  images) and ``H-strips -> spatial_axis`` (spatial parallelism over
+  output rows), resolved from a mesh + the conv rules in
+  ``distributed/sharding.py`` by :func:`resolve_conv_mesh`.
+
+* **Per-device strip geometry** — shard ``d`` owns output rows
+  ``[d * h_out_local, (d+1) * h_out_local)`` (``h_out_local =
+  ceil(h_out / spatial_shards)``; trailing shards may own fewer or zero
+  real rows — they compute padding that is sliced off, the same
+  pad-to-whole-strips treatment ConvPlan applies on chip).  Its input
+  slab is the aligned ``slab_rows = h_out_local * stride`` rows of the
+  globally padded ifmap.
+
+* **Halo exchange** — before the local kernel runs, each interior
+  boundary moves the K-1 boundary rows *down* by ``ppermute``: shard
+  ``d`` receives the first ``K-1`` rows of shard ``d+1``'s slab (the
+  rows its last output windows reach into).  Because slabs are
+  stride-aligned by construction (``slab_rows = h_out_local * stride``),
+  this single direction is sufficient — no boundary output row is ever
+  recomputed.  Under the vjp the same seam is crossed again in reverse:
+  the input-grad halo exchange is the *transpose shuffle* of the
+  forward ``ppermute``, moving the K-1 boundary rows of window
+  cotangent back up.  ``halo_bytes`` bills that round trip —
+  ``2 * (K-1) * Wp * Cin * dtype * (shards-1) * N`` — as a first-class
+  roofline term (fed to ``T_collective`` by
+  ``core.roofline.sharded_conv_roofline``);
+  ``halo_bytes_oneway`` is the forward-only (inference) half.
+
+* **Reduction at shards=1** — ``sharded_traffic()`` returns the global
+  ConvPlan byte terms plus the halo term; with one device the halo term
+  is zero and every number reduces exactly to ``ConvPlan.hbm_bytes()``.
+
+The per-device kernel invocation is planned by :meth:`local_plan` — an
+ordinary :class:`ConvPlan` over the assembled local window, so the
+sharded path inherits the carry/halo dataflow axis, the tile knobs and
+the canonical oversize-strip clamp of the single-device subsystem.
+``kernels/trim_conv2d_sharded.py`` executes this plan under
+``shard_map``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+from repro.core.conv_plan import ConvPlan
+
+
+def resolve_conv_mesh(mesh, rules: dict | None = None):
+    """Resolve the conv mesh mapping: ``(batch_axis, batch_shards,
+    spatial_axis, spatial_shards)``.
+
+    ``rules`` maps the logical conv axes ``"batch"`` / ``"strips"`` to
+    mesh axis names (default: ``distributed.sharding.CONV_RULES``, i.e.
+    ``batch -> 'data'``, ``strips -> 'model'``).  A rule axis missing
+    from the mesh resolves to ``(None, 1)`` — the dimension stays
+    unsharded.  Tuple rules pick the first axis present in the mesh.
+    """
+    if rules is None:
+        from repro.distributed.sharding import CONV_RULES
+        rules = CONV_RULES
+    shape = dict(mesh.shape)
+
+    def pick(name):
+        ax = rules.get(name)
+        if isinstance(ax, (tuple, list)):
+            ax = next((a for a in ax if a in shape), None)
+        if ax not in shape:
+            ax = None
+        return ax, (int(shape[ax]) if ax is not None else 1)
+
+    batch_axis, batch_shards = pick("batch")
+    spatial_axis, spatial_shards = pick("strips")
+    if batch_axis is not None and batch_axis == spatial_axis:
+        raise ValueError(
+            f"conv rules map batch and strips to the same mesh axis "
+            f"{batch_axis!r}")
+    return batch_axis, batch_shards, spatial_axis, spatial_shards
+
+
+@dataclass(frozen=True)
+class ShardedConvPlan(ConvPlan):
+    """ConvPlan + mesh axis mapping and cross-device halo accounting.
+
+    The inherited fields/properties describe the *global* problem; the
+    sharding fields add the device grid.  ``batch_shards`` must divide
+    ``n``; ``spatial_shards`` may exceed ``h_out`` (trailing shards then
+    own zero real output rows and compute only padding — correct, just
+    wasteful, exactly like an oversized on-chip strip).
+    """
+
+    batch_shards: int = 1
+    spatial_shards: int = 1
+    batch_axis: str | None = "data"
+    spatial_axis: str | None = "model"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.batch_shards < 1 or self.spatial_shards < 1:
+            raise ValueError(
+                f"shard counts must be >= 1, got batch={self.batch_shards} "
+                f"spatial={self.spatial_shards}")
+        if self.n % self.batch_shards:
+            raise ValueError(
+                f"batch_shards={self.batch_shards} must divide n={self.n}")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, x_shape, w_shape, *, batch_shards: int = 1,
+              spatial_shards: int = 1, batch_axis: str | None = "data",
+              spatial_axis: str | None = "model",
+              **kw) -> "ShardedConvPlan":
+        """Sharded plan from array shapes; ``**kw`` are the ordinary
+        :meth:`ConvPlan.build` knobs (stride/pad/groups/tiles/dataflow)."""
+        base = ConvPlan.build(x_shape, w_shape, **kw)
+        fields = {f.name: getattr(base, f.name)
+                  for f in dataclasses.fields(ConvPlan)}
+        return cls(**fields, batch_shards=batch_shards,
+                   spatial_shards=spatial_shards, batch_axis=batch_axis,
+                   spatial_axis=spatial_axis)
+
+    @classmethod
+    def from_mesh(cls, x_shape, w_shape, mesh, *, rules: dict | None = None,
+                  **kw) -> "ShardedConvPlan":
+        """Sharded plan with the shard grid resolved from a mesh + conv
+        rules (the resolution ``ops.conv2d(..., mesh=)`` performs)."""
+        ba, bs, sa, ss = resolve_conv_mesh(mesh, rules)
+        return cls.build(x_shape, w_shape, batch_shards=bs,
+                         spatial_shards=ss, batch_axis=ba, spatial_axis=sa,
+                         **kw)
+
+    # -- device grid -------------------------------------------------------
+
+    @property
+    def n_devices(self) -> int:
+        return self.batch_shards * self.spatial_shards
+
+    @property
+    def n_local(self) -> int:
+        """Images per device (data parallelism)."""
+        return self.n // self.batch_shards
+
+    # -- per-shard strip geometry ------------------------------------------
+
+    @property
+    def h_out_local(self) -> int:
+        """Output rows owned per spatial shard (last shards may own
+        fewer real rows; the remainder is sliced padding)."""
+        return math.ceil(self.h_out / self.spatial_shards)
+
+    @property
+    def slab_rows(self) -> int:
+        """Input rows resident per shard *before* the halo exchange —
+        the aligned ``h_out_local * stride`` slab of the padded ifmap."""
+        return self.h_out_local * self.stride
+
+    @property
+    def halo_rows_down(self) -> int:
+        """Rows received from the next shard per exchange (its first
+        K-1 slab rows — the paper's shadow-register overlap)."""
+        return 0 if self.spatial_shards == 1 else self.kh - 1
+
+    @property
+    def local_in_rows(self) -> int:
+        """Rows of the assembled per-device input window: the slab plus
+        the K-1 tail rows its last output windows reach into.  Slabs are
+        stride-aligned, so no top overlap is needed.  At
+        ``spatial_shards == 1`` the tail is local data (no exchange)."""
+        return self.slab_rows + (self.kh - 1)
+
+    @property
+    def local_x_shape(self) -> tuple[int, int, int, int]:
+        """Shape of the assembled per-device input (already W-padded;
+        the local kernel runs with pad=0)."""
+        return (self.n_local, self.local_in_rows, self.wp, self.cin)
+
+    @property
+    def local_out_rows(self) -> int:
+        """Output rows the local kernel computes — exactly the owned
+        rows (slab alignment means no boundary row is recomputed)."""
+        return self.h_out_local
+
+    def shard_strips(self) -> list[tuple[int, int]]:
+        """Per-shard ``(first_output_row, real_rows)`` — the strips tile
+        the global output exactly (no row unassigned, none owned twice;
+        trailing shards may own zero rows)."""
+        out = []
+        for d in range(self.spatial_shards):
+            start = d * self.h_out_local
+            rows = max(0, min(self.h_out_local, self.h_out - start))
+            out.append((start, rows))
+        return out
+
+    def local_plan(self, *, tile_h: int | None = None,
+                   tile_cout: int | None = None) -> ConvPlan:
+        """The ordinary ConvPlan of one device's kernel invocation —
+        the plan ``trim_conv2d`` executes per shard.  The plan's own
+        tile knobs carry over by default; an oversized global ``tile_h``
+        clamps canonically to the local full-height strip."""
+        return ConvPlan.build(
+            self.local_x_shape,
+            (self.kh, self.kw, self.cin_per_group, self.cout),
+            stride=self.stride, pad=0, groups=self.groups,
+            dtype_bytes=self.dtype_bytes,
+            tile_h=self.tile_h if tile_h is None else tile_h,
+            tile_cout=self.tile_cout if tile_cout is None else tile_cout,
+            dataflow=self.dataflow, vmem_budget=self.vmem_budget)
+
+    # -- cross-device halo traffic (the first-class roofline term) ---------
+
+    @property
+    def halo_bytes_oneway(self) -> int:
+        """Cross-device bytes of the *forward* neighbor halo exchange:
+        each of the ``spatial_shards - 1`` interior boundaries moves
+        ``halo_rows_down`` rows down, for every image — the inference
+        wire cost."""
+        return ((self.spatial_shards - 1) * self.n * self.halo_rows_down
+                * self.wp * self.cin * self.dtype_bytes)
+
+    @property
+    def halo_bytes(self) -> int:
+        """Total cross-device bytes of one halo-exchange round trip:
+        the forward ``ppermute`` down plus its vjp transpose shuffle
+        back up — ``2 * (K-1) * Wp * Cin * dtype * (shards-1) * N``,
+        zero at shards=1 (the single-device carry)."""
+        return 2 * self.halo_bytes_oneway
+
+    @property
+    def halo_bytes_per_device(self) -> float:
+        return self.halo_bytes / self.n_devices
+
+    @property
+    def local_macs(self) -> int:
+        """MACs per device, including the padded tail rows of ragged
+        shards."""
+        return (self.n_local * self.local_out_rows * self.w_out
+                * self.cout * self.kh * self.kw * self.cin_per_group)
+
+    @property
+    def local_flops(self) -> int:
+        return 2 * self.local_macs
+
+    def sharded_traffic(self, mode: str | None = None) -> dict:
+        """Global HBM byte terms (exactly :meth:`ConvPlan.hbm_bytes` —
+        the slabs partition the padded input) plus the cross-device
+        ``halo`` term.  At ``batch_shards == spatial_shards == 1`` this
+        reduces *exactly* to the single-device ConvPlan numbers with
+        ``halo == 0``.  Per-device HBM granularity (local strip padding,
+        per-shard weight re-streaming) lives in :meth:`local_plan`."""
+        t = self.hbm_bytes(mode)
+        return dict(input=t["input"], weights=t["weights"],
+                    output=t["output"], hbm_total=t["total"],
+                    halo=self.halo_bytes,
+                    total=t["total"] + self.halo_bytes,
+                    overhead_pct=t["overhead_pct"])
+
+    def as_dict(self) -> dict:
+        d = super().as_dict()
+        t = self.sharded_traffic()
+        d.update(batch_shards=self.batch_shards,
+                 spatial_shards=self.spatial_shards,
+                 n_devices=self.n_devices,
+                 h_out_local=self.h_out_local,
+                 slab_rows=self.slab_rows,
+                 halo_rows_down=self.halo_rows_down,
+                 halo_bytes=t["halo"], sharded_total=t["total"])
+        return d

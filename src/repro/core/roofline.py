@@ -251,6 +251,29 @@ def conv_plan_roofline(cell: str, plan, mode: str | None = None
     )
 
 
+def sharded_conv_roofline(cell: str, plan) -> RooflineTerms:
+    """Roofline terms for one *sharded* conv layer, read straight from
+    its ``ShardedConvPlan`` (DESIGN.md §6): per-device HBM traffic and
+    FLOPs from the local per-shard plan, and the cross-device
+    halo-exchange round trip (forward ``ppermute`` + vjp transpose
+    shuffle) on the collective term (``ppermute`` wire cost = the bytes
+    themselves).  At ``shards == 1`` this reduces to
+    ``conv_plan_roofline`` of the equivalent single-device plan (zero
+    collective bytes)."""
+    local = plan.local_plan()
+    traffic = local.hbm_bytes()
+    halo = float(plan.halo_bytes_per_device)
+    return RooflineTerms(
+        cell=cell,
+        flops_per_dev=float(plan.local_flops),
+        hbm_bytes_per_dev=float(traffic["total"]),
+        coll_bytes_per_dev=halo,
+        coll_by_kind={"collective-permute": halo} if halo else {},
+        peak_memory_bytes=float(local.vmem_resident_bytes),
+        model_flops_per_dev=float(plan.flops) / plan.n_devices,
+    )
+
+
 def markdown_table(rows: list[RooflineTerms]) -> str:
     hdr = ("| cell | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | "
            "useful/HLO | roofline frac | peak GiB/dev |\n"

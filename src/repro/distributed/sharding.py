@@ -41,6 +41,30 @@ def make_rules(fsdp: bool = False, seq_parallel: bool = False,
     return rules
 
 
+# ---------------------------------------------------------------------------
+# Conv sharding rules (spatial parallelism — DESIGN.md §6)
+# ---------------------------------------------------------------------------
+#
+# The conv path has exactly two shardable logical axes: the batch (data
+# parallelism over images) and the output H-strips (spatial parallelism —
+# the multi-device image of the kernel's on-chip strips, whose K-1
+# boundary rows become a real neighbor halo exchange).  Channels stay
+# unsharded: the TrIM dataflow keeps a full Cin slice resident per strip.
+
+CONV_RULES: dict = {
+    "batch": ("pod", "data"),     # images -> data axis
+    "strips": "model",            # output H-strips -> model axis
+}
+
+
+def make_conv_rules(**overrides) -> dict:
+    """Conv rules with overrides (e.g. ``strips=None`` to disable spatial
+    parallelism, or ``strips="data"`` on a spatial-only mesh)."""
+    rules = dict(CONV_RULES)
+    rules.update(overrides)
+    return rules
+
+
 def batch_spec(mesh, rules):
     from jax.sharding import NamedSharding, PartitionSpec
     axes = rules.get("batch", ("pod", "data"))

@@ -44,6 +44,7 @@ import typing
 
 from repro.core import autotune
 from repro.core.conv_plan import ConvPlan, input_grad_geometry
+from repro.core.conv_shard import ShardedConvPlan, resolve_conv_mesh
 from repro.core.tiling import subkernel_decomposition
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -51,6 +52,7 @@ from repro.kernels.trim_conv1d import trim_conv1d
 from repro.kernels.trim_conv2d import (ACTIVATIONS, trim_conv2d,
                                        trim_conv2d_input_grad,
                                        trim_conv2d_weight_grad)
+from repro.kernels.trim_conv2d_sharded import sharded_conv2d
 
 MAX_NATIVE_K = 8
 
@@ -326,7 +328,8 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
            activation: str | None = None,
            tile_h: int | None = None, tile_cout: int | None = None,
            dataflow: str | None = None,
-           use_autotune_cache: bool = True) -> jax.Array:
+           use_autotune_cache: bool = True,
+           mesh=None, rules: dict | None = None) -> jax.Array:
     """(Grouped) 2D convolution with optional fused bias + activation.
 
     x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout) or a
@@ -341,16 +344,38 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
     K > MAX_NATIVE_K kernel-tiled path honors explicit knobs on every
     sub-kernel but never consults the cache (records describe the full-K
     problem, not the sub-kernel geometry).
+
+    ``mesh`` (with optional conv ``rules``, default
+    ``distributed.sharding.CONV_RULES``) selects the sharded execution
+    path (DESIGN.md §6): batch shards over the rules' ``"batch"`` axis,
+    output H-strips over ``"strips"``, with a ``ppermute`` neighbor halo
+    exchange of the K-1 boundary rows before the per-shard kernel.  The
+    sharded path consults the autotune cache under device-count
+    namespaced keys (``conv2d_shard:<ndev>:``) so single- and
+    multi-device tunings never alias.
     """
     if isinstance(w, PackedConv2dWeights):
+        if mesh is not None:
+            raise ValueError(
+                "sharded conv2d takes raw (K, K, Cin/g, Cout) weights; "
+                "packed weights freeze a single-device layout")
         return _conv2d_packed(x, w, stride=stride, padding=padding,
                               impl=impl, bias=bias, activation=activation,
                               tile_h=tile_h, dataflow=dataflow,
                               use_autotune_cache=use_autotune_cache)
     if impl == "ref":
+        # the oracle computes the same global math regardless of mesh
         return ref.conv2d(x, w, stride=stride, padding=padding,
                           feature_group_count=feature_group_count,
                           bias=bias, activation=activation)
+    if mesh is not None:
+        return _conv2d_sharded(x, w, stride=stride, padding=padding,
+                               feature_group_count=feature_group_count,
+                               bias=bias, activation=activation,
+                               tile_h=tile_h, tile_cout=tile_cout,
+                               dataflow=dataflow,
+                               use_autotune_cache=use_autotune_cache,
+                               mesh=mesh, rules=rules)
     k = w.shape[0]
     if padding == "same":
         ph, pw = _same_pads(x.shape[1], k, stride), \
@@ -399,6 +424,56 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
     return ref.epilogue(out, bias, activation)
 
 
+def _conv2d_sharded(x: jax.Array, w: jax.Array, *, stride: int,
+                    padding: str, feature_group_count: int,
+                    bias: jax.Array | None, activation: str | None,
+                    tile_h: int | None, tile_cout: int | None,
+                    dataflow: str | None, use_autotune_cache: bool,
+                    mesh, rules: dict | None) -> jax.Array:
+    """The shard_map path (DESIGN.md §6): resolve the shard grid from
+    the mesh + conv rules, plan with :class:`ShardedConvPlan`, and run
+    the halo-exchange schedule with the *differentiable* conv core as
+    the per-shard kernel — gradients transpose the halo shuffle and
+    psum the replicated weight/bias cotangents automatically."""
+    k = w.shape[0]
+    if k > MAX_NATIVE_K:
+        raise ValueError(
+            f"sharded conv2d supports K <= {MAX_NATIVE_K}; decompose "
+            "large kernels before sharding (ops.conv2d adder-tree path)")
+    if padding == "same":
+        ph, pw = _same_pads(x.shape[1], k, stride), \
+            _same_pads(x.shape[2], k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    ba, bs, sa, ss = resolve_conv_mesh(mesh, rules)
+    if use_autotune_cache and (tile_h is None or tile_cout is None
+                               or dataflow is None):
+        rec = autotune.sharded_knobs_for(
+            x.shape, w.shape, batch_shards=bs, spatial_shards=ss,
+            stride=stride, pad=0, groups=feature_group_count,
+            dtype=str(x.dtype))
+        if rec is not None:
+            tile_h = tile_h if tile_h is not None else rec["tile_h"]
+            tile_cout = tile_cout if tile_cout is not None \
+                else rec["tile_cout"]
+            dataflow = dataflow if dataflow is not None \
+                else rec["dataflow"]
+    plan = ShardedConvPlan.build(
+        x.shape, w.shape, stride=stride, pad=0,
+        groups=feature_group_count, dtype_bytes=x.dtype.itemsize,
+        tile_h=tile_h, tile_cout=tile_cout, dataflow=dataflow or "carry",
+        batch_shards=bs, spatial_shards=ss, batch_axis=ba,
+        spatial_axis=sa)
+    cfg = _ConvVjpConfig(stride=stride, pad=0,
+                         groups=feature_group_count,
+                         activation=activation, tile_h=tile_h,
+                         tile_cout=tile_cout,
+                         dataflow=dataflow or "carry",
+                         use_autotune_cache=use_autotune_cache)
+    return sharded_conv2d(x, w, bias, plan=plan, mesh=mesh,
+                          local_conv=functools.partial(_conv2d_vjp_core,
+                                                       cfg))
+
+
 def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
                    stride: int, padding: str, impl: str,
                    bias: jax.Array | None, activation: str | None,
@@ -440,11 +515,12 @@ def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
 def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                      padding: str = "same", impl: str = "pallas",
                      bias: jax.Array | None = None,
-                     activation: str | None = None) -> jax.Array:
+                     activation: str | None = None,
+                     mesh=None, rules: dict | None = None) -> jax.Array:
     """Depthwise 2D conv (MobileNet-style).  w: (K, K, 1, Cin * mult)."""
     return conv2d(x, w, stride=stride, padding=padding, impl=impl,
                   feature_group_count=x.shape[-1], bias=bias,
-                  activation=activation)
+                  activation=activation, mesh=mesh, rules=rules)
 
 
 def depthwise_conv1d(x: jax.Array, w: jax.Array, *,

@@ -1,0 +1,38 @@
+"""Force N host CPU devices — must run before the first jax import.
+
+XLA reads ``--xla_force_host_platform_device_count`` once, at backend
+initialization, so every entry point that wants a multi-device CPU run
+(examples, the ``--shard`` benchmark, the multidevice test harness) has
+to set the flag before anything imports jax.  This module is therefore
+deliberately jax-free: entry scripts import it first, call the helper,
+and only then import jax.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+FLAG = "xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> None:
+    """Append the host-device flag to XLA_FLAGS (no-op for n <= 1 or
+    when a count is already forced, e.g. by the caller's environment)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} --{FLAG}={n}".strip()
+
+
+def force_host_device_count_from_argv(flag: str = "--devices") -> None:
+    """Read ``--devices N`` / ``--devices=N`` straight from ``sys.argv``
+    (argparse runs far too late — jax is imported at module scope) and
+    force N devices."""
+    argv = sys.argv
+    for i, tok in enumerate(argv):
+        if tok == flag and i + 1 < len(argv):
+            force_host_device_count(int(argv[i + 1]))
+            return
+        if tok.startswith(flag + "="):
+            force_host_device_count(int(tok.split("=", 1)[1]))
+            return

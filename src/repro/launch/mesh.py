@@ -35,3 +35,19 @@ def make_host_mesh(model: int = 1):
     """Tiny mesh over the real local devices (smoke tests / examples)."""
     n = jax.device_count()
     return compat_make_mesh((n // model, model), ("data", "model"))
+
+
+def make_conv_mesh(data: int, spatial: int):
+    """The conv mesh (DESIGN.md §6): images over 'data', output H-strips
+    over 'model' — the axes ``distributed.sharding.CONV_RULES`` maps the
+    conv's logical axes onto.  Uses the first ``data * spatial`` local
+    devices (force host CPU devices with ``launch.hostdevices`` first)."""
+    import numpy as np
+    ndev = data * spatial
+    if ndev > jax.device_count():
+        raise ValueError(
+            f"need {ndev} devices, have {jax.device_count()} — force "
+            f"host CPU devices before the first jax import "
+            f"(launch.hostdevices)")
+    devs = np.array(jax.devices()[:ndev]).reshape(data, spatial)
+    return jax.sharding.Mesh(devs, ("data", "model"))

@@ -160,18 +160,22 @@ def conv2d_params(k: int, cin: int, cout: int, *, groups: int = 1,
 def conv2d_apply(p: dict, x: jax.Array, *, stride: int = 1,
                  padding: str = "same", groups: int = 1,
                  activation: str | None = "relu",
-                 impl: str = "pallas") -> jax.Array:
+                 impl: str = "pallas",
+                 mesh=None, rules: dict | None = None) -> jax.Array:
     """One conv layer with the bias + activation epilogue fused into the
     Pallas kernel (single HBM round-trip for the output).  Accepts either
     raw params (``{"w", "b"}``) or a tree packed by
     :func:`conv2d_pack_params` (``{"packed"}``) — the packed form skips
-    the per-call weight pad/reshape."""
+    the per-call weight pad/reshape.  ``mesh``/``rules`` select the
+    sharded halo-exchange path (DESIGN.md §6; raw params only — packed
+    weights freeze a single-device layout)."""
     if "packed" in p:
         return ops.conv2d(x, p["packed"], stride=stride, padding=padding,
-                          impl=impl, activation=activation)
+                          impl=impl, activation=activation,
+                          mesh=mesh, rules=rules)
     return ops.conv2d(x, p["w"], stride=stride, padding=padding, impl=impl,
                       feature_group_count=groups, bias=p.get("b"),
-                      activation=activation)
+                      activation=activation, mesh=mesh, rules=rules)
 
 
 def conv2d_pack_params(p: dict, *, groups: int = 1,
@@ -216,10 +220,14 @@ def depthwise_separable_pack_params(p: dict, *, x_shape=None,
 
 def depthwise_separable_apply(p: dict, x: jax.Array, *, stride: int = 1,
                               activation: str | None = "relu",
-                              impl: str = "pallas") -> jax.Array:
+                              impl: str = "pallas",
+                              mesh=None,
+                              rules: dict | None = None) -> jax.Array:
     h = conv2d_apply(p["dw"], x, stride=stride, groups=x.shape[-1],
-                     activation=activation, impl=impl)
-    return conv2d_apply(p["pw"], h, activation=activation, impl=impl)
+                     activation=activation, impl=impl, mesh=mesh,
+                     rules=rules)
+    return conv2d_apply(p["pw"], h, activation=activation, impl=impl,
+                        mesh=mesh, rules=rules)
 
 
 def simple_cnn_params(*, cin: int = 3, channels=(8, 16), n_classes: int = 10,
@@ -245,20 +253,23 @@ def simple_cnn_params(*, cin: int = 3, channels=(8, 16), n_classes: int = 10,
     return p
 
 
-def simple_cnn_apply(p: dict, x: jax.Array, *,
-                     impl: str = "pallas") -> jax.Array:
+def simple_cnn_apply(p: dict, x: jax.Array, *, impl: str = "pallas",
+                     mesh=None, rules: dict | None = None) -> jax.Array:
     """Forward pass of :func:`simple_cnn_params`.  x: (N, H, W, Cin);
     returns (N, n_classes) logits.  The depthwise stage is applied iff
     the params carry one (inferred from the tree, like the stage
-    count)."""
+    count).  With ``mesh``/``rules`` every conv runs the sharded
+    halo-exchange path (data + spatial parallelism, DESIGN.md §6)."""
     n_stages = sum(1 for k in p if k.startswith("conv"))
     for i in range(n_stages):
-        x = conv2d_apply(p[f"conv{i}"], x, activation="relu", impl=impl)
+        x = conv2d_apply(p[f"conv{i}"], x, activation="relu", impl=impl,
+                         mesh=mesh, rules=rules)
         if "dw" in p and i == n_stages - 1:
             x = conv2d_apply(p["dw"], x, groups=x.shape[-1],
-                             activation="relu", impl=impl)
+                             activation="relu", impl=impl, mesh=mesh,
+                             rules=rules)
         x = conv2d_apply(p[f"down{i}"], x, stride=2, activation="relu",
-                         impl=impl)
+                         impl=impl, mesh=mesh, rules=rules)
     x = x.mean(axis=(1, 2))                       # global mean pool
     return x @ p["head"]["w"] + p["head"]["b"]
 

@@ -239,6 +239,102 @@ def test_tune_backward_round_trip():
     assert autotune.weight_grad_knobs_for(X_SHAPE, W_SHAPE) is None
 
 
+# ---------------------------------------------------------------------------
+# Sharded keys (DESIGN.md §6): conv2d_shard:<ndev> namespacing
+# ---------------------------------------------------------------------------
+
+def test_sharded_keys_never_alias_single_device():
+    """Sharded records are namespaced by the full shard grid: the same
+    raw shape tuple under different (batch x spatial) splits — even
+    splits with the same device count — and the single-device path are
+    all distinct keys, and writing any one never shadows the others."""
+    fwd_key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    splits = [(1, 1), (1, 4), (4, 1), (1, 8), (8, 1), (2, 4)]
+    keys = {grid: autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0,
+                                    op=autotune.sharded_key_op(*grid))
+            for grid in splits}
+    assert len({fwd_key, *keys.values()}) == len(splits) + 1
+    for (bs, ss), key in keys.items():
+        assert key.startswith(f"conv2d_shard:{bs * ss}:")
+    autotune.store(fwd_key, dict(tile_h=8, tile_cout=4, dataflow="carry"))
+    for i, ((bs, ss), key) in enumerate(keys.items()):
+        autotune.store(key, dict(tile_h=i + 1, tile_cout=2,
+                                 dataflow="halo"))
+    # each lookup sees only its own record — in particular the two
+    # 8-device splits (8x1 data-parallel vs 1x8 spatial) never alias
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE)["tile_h"] == 8
+    for i, (bs, ss) in enumerate(splits):
+        got = autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                         batch_shards=bs,
+                                         spatial_shards=ss)
+        assert (got["tile_h"], got["dataflow"]) == (i + 1, "halo")
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                      spatial_shards=2) is None
+    # malformed sharded records are rejected, not trusted
+    autotune.store(keys[(1, 4)], dict(tile_h="bad", tile_cout=2,
+                                      dataflow="halo"))
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                      spatial_shards=4) is None
+
+
+def test_tune_sharded_round_trip():
+    """tune_sharded persists under the shard-grid key and reads back
+    through the validated lookup (surviving the in-process memo)."""
+    rec = autotune.tune_sharded(X_SHAPE, W_SHAPE, spatial_shards=4)
+    assert rec["dataflow"] in autotune.DATAFLOWS
+    assert rec["tile_h"] >= 1 and rec["tile_cout"] >= 1
+    got = autotune.sharded_knobs_for(X_SHAPE, W_SHAPE, spatial_shards=4)
+    assert got == rec
+    autotune.reset_memory_cache()
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                      spatial_shards=4) == rec
+    # a different mesh size — or a different split of the same size —
+    # is a different problem
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                      spatial_shards=8) is None
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+                                      batch_shards=4) is None
+    rec2 = autotune.tune_sharded(X_SHAPE, W_SHAPE, batch_shards=1,
+                                 spatial_shards=1)
+    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE) == rec2
+    # ... and never pollutes the single-device lookup
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+
+
+def test_conv2d_sharded_consults_namespaced_cache(monkeypatch):
+    """ops.conv2d(..., mesh=) fills unset knobs from the
+    conv2d_shard:<ndev> record of the global kernel-seen shape — and
+    ignores the single-device record for the same shape."""
+    import jax
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    x = jnp.asarray(RNG.standard_normal((1, 14, 14, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(W_SHAPE) * .3, jnp.float32)
+    # 'same' K=3 s=1 pre-pads to 16x16; the 1x1 grid on this tiny mesh
+    autotune.store(autotune.make_key((1, 16, 16, 8), W_SHAPE, stride=1,
+                                     pad=0,
+                                     op=autotune.sharded_key_op(1, 1)),
+                   dict(tile_h=6, tile_cout=4, dataflow="halo",
+                        source="model"))
+    autotune.store(autotune.make_key((1, 16, 16, 8), W_SHAPE, stride=1,
+                                     pad=0),
+                   dict(tile_h=2, tile_cout=12, dataflow="carry",
+                        source="model"))
+
+    seen = {}
+    real = ops.trim_conv2d
+
+    def spy(*args, **kw):
+        seen.update(kw)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops, "trim_conv2d", spy)
+    got = ops.conv2d(x, w, mesh=mesh)
+    assert (seen["tile_h"], seen["tile_cout"], seen["dataflow"]) \
+        == (6, 4, "halo")
+    _allclose(got, ref.conv2d(x, w))
+
+
 def test_weight_grad_candidates_fit_vmem():
     plans = autotune.candidate_weight_grad_knobs(X_SHAPE, W_SHAPE)
     assert plans

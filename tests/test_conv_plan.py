@@ -105,6 +105,71 @@ def test_plan_validation():
         ConvPlan(n=1, h=8, w=8, cin=4, cout=9, kh=3, kw=3, groups=2)
     with pytest.raises(ValueError):
         make_plan((1, 8, 8, 4), (3, 3, 4, 8), groups=2)  # cin mismatch
+    with pytest.raises(ValueError):
+        ConvPlan(n=1, h=8, w=8, cin=4, cout=8, kh=3, kw=3, tile_h=0)
+    with pytest.raises(ValueError):
+        ConvPlan(n=1, h=8, w=8, cin=4, cout=8, kh=3, kw=3, tile_cout=0)
+
+
+# ---------------------------------------------------------------------------
+# Oversized-strip canonicalization (tile_h > H_out — DESIGN.md §6 fix):
+# instead of padding/billing ever more rows that neither dataflow reads
+# (inconsistently between carry and halo), any tile_h beyond the
+# full-height strip clamps to it, so both dataflows and every consumer
+# see one canonical single-strip plan.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dataflow", ["carry", "halo"])
+@pytest.mark.parametrize("stride", [1, 2, 3])
+def test_oversized_tile_h_clamps_canonically(dataflow, stride):
+    full = ConvPlan(n=1, h=13, w=9, cin=3, cout=5, kh=3, kw=3,
+                    stride=stride, dataflow=dataflow,
+                    tile_h=((13 - 3) // stride + 1
+                            + (3 - 1) // stride) * stride)
+    for oversize in (full.tile_h + stride, 10 * full.tile_h, 997 * stride):
+        plan = ConvPlan(n=1, h=13, w=9, cin=3, cout=5, kh=3, kw=3,
+                        stride=stride, dataflow=dataflow, tile_h=oversize)
+        # identical plan: same padding, same grid, same traffic
+        assert plan == full
+        assert plan.g_tiles == 1
+        assert plan.padded_input_shape == full.padded_input_shape
+        assert plan.hbm_bytes() == full.hbm_bytes()
+    # both dataflows agree on the clamp (the bug class this fixes:
+    # carry and halo padded layouts diverging for tile_h > H_out)
+    a = ConvPlan(n=1, h=13, w=9, cin=3, cout=5, kh=3, kw=3, stride=stride,
+                 dataflow="carry", tile_h=500 * stride)
+    b = ConvPlan(n=1, h=13, w=9, cin=3, cout=5, kh=3, kw=3, stride=stride,
+                 dataflow="halo", tile_h=500 * stride)
+    assert a.tile_h == b.tile_h
+    assert a.padded_input_shape == b.padded_input_shape
+
+
+@pytest.mark.parametrize("dataflow", ["carry", "halo"])
+def test_oversized_tile_h_kernel_matches_oracle(dataflow):
+    """The kernel executes the clamped plan correctly for tile_h far
+    beyond H_out, for both dataflows and stride > 1."""
+    x = jnp.asarray(RNG.standard_normal((2, 11, 9, 4)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 4, 6)) * .3, jnp.float32)
+    for stride in (1, 2):
+        want = ref.conv2d(x, w, stride=stride, padding="valid")
+        got = trim_conv2d(x, w, stride=stride, tile_h=1000 * stride,
+                          dataflow=dataflow)
+        _allclose(got, want)
+
+
+def test_oversized_tile_go_clamps():
+    """WeightGradPlan mirrors the clamp: a cotangent strip taller than
+    the whole cotangent is the full-height strip."""
+    plan = ConvPlan.build_weight_grad((1, 12, 10, 4), (3, 3, 4, 6),
+                                      stride=2, tile_go=999)
+    assert plan.tile_go == plan.h_out
+    assert plan.go_tiles == 1
+    small = ConvPlan.build_weight_grad((1, 12, 10, 4), (3, 3, 4, 6),
+                                       stride=2, tile_go=plan.h_out)
+    assert plan == small
+    with pytest.raises(ValueError):
+        ConvPlan.build_weight_grad((1, 12, 10, 4), (3, 3, 4, 6),
+                                   tile_go=0)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.conv_plan import (ConvPlan, WeightGradPlan,
                                   input_grad_geometry)
+from repro.core.conv_shard import ShardedConvPlan
 from repro.kernels import ops, ref
 from repro.kernels.trim_conv2d import (trim_conv2d, trim_conv2d_input_grad,
                                        trim_conv2d_weight_grad)
@@ -154,6 +155,99 @@ def test_backward_plan_invariants(h, w, k, stride, pad_frac, groups,
     assert wg.macs == fwd.macs
     assert wg.hbm_bytes()["total"] > 0
     assert wg.vmem_resident_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# ShardedConvPlan invariants (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(h=st.integers(4, 40), w=st.integers(4, 40),
+       k=st.sampled_from([1, 2, 3, 4, 5, 7]),
+       stride=st.sampled_from([1, 2, 3]),
+       pad_frac=st.floats(min_value=0.0, max_value=1.0),
+       groups=st.sampled_from([1, 2]),
+       cin_pg=st.integers(1, 5), cout_pg=st.integers(1, 5),
+       n_per_shard=st.integers(1, 3),
+       batch_shards=st.sampled_from([1, 2, 4]),
+       spatial_shards=st.sampled_from([1, 2, 3, 4, 8]),
+       dataflow=st.sampled_from(["carry", "halo"]))
+def test_sharded_plan_invariants(h, w, k, stride, pad_frac, groups,
+                                 cin_pg, cout_pg, n_per_shard,
+                                 batch_shards, spatial_shards, dataflow):
+    geo = _geometry(h, w, k, stride, pad_frac, groups, cin_pg, cout_pg)
+    if geo is None:
+        return
+    n = n_per_shard * batch_shards
+    try:
+        plan = ShardedConvPlan.build(
+            (n, geo["h"], geo["w"], geo["cin"]),
+            (k, k, cin_pg, geo["cout"]), stride=stride, pad=geo["pad"],
+            groups=groups, dataflow=dataflow,
+            batch_shards=batch_shards, spatial_shards=spatial_shards)
+    except ValueError:
+        return                                  # empty output etc.
+
+    # per-shard strips tile the global output exactly: contiguous,
+    # disjoint, and every output row owned by exactly one shard
+    strips = plan.shard_strips()
+    assert len(strips) == spatial_shards
+    assert sum(rows for _, rows in strips) == plan.h_out
+    cursor = 0
+    for start, rows in strips:
+        assert 0 <= rows <= plan.h_out_local
+        if rows:
+            assert start == cursor
+            cursor += rows
+    assert cursor == plan.h_out
+
+    # halo bytes: each interior seam moves K-1 rows down (forward
+    # ppermute) and K-1 rows back up (the vjp transpose shuffle), for
+    # every image — 2 (K-1)-row boundaries per seam at every stride
+    db = plan.dtype_bytes
+    assert plan.halo_bytes == (2 * (k - 1) * plan.wp * plan.cin
+                               * db * (spatial_shards - 1) * n)
+    assert plan.halo_bytes == 2 * plan.halo_bytes_oneway
+    if spatial_shards == 1 or k == 1:
+        assert plan.halo_bytes == 0
+    assert plan.halo_bytes_per_device * plan.n_devices == plan.halo_bytes
+
+    # shards=1 reduces exactly to ConvPlan traffic
+    t = plan.sharded_traffic()
+    base = ConvPlan.build(
+        (n, geo["h"], geo["w"], geo["cin"]), (k, k, cin_pg, geo["cout"]),
+        stride=stride, pad=geo["pad"], groups=groups, dataflow=dataflow)
+    if spatial_shards == 1 and batch_shards == 1:
+        bt = base.hbm_bytes()
+        assert t["halo"] == 0
+        assert t["total"] == t["hbm_total"] == bt["total"]
+        assert (t["input"], t["weights"], t["output"]) == \
+            (bt["input"], bt["weights"], bt["output"])
+    else:
+        assert t["total"] == t["hbm_total"] + t["halo"]
+
+    # the per-device kernel invocation is a consistent ordinary ConvPlan
+    local = plan.local_plan()
+    assert isinstance(local, ConvPlan)
+    # slab alignment: the local kernel emits exactly the owned rows
+    assert local.h_out == plan.local_out_rows == plan.h_out_local
+    assert local.w_out == plan.w_out
+    assert (local.n, local.cin, local.cout) == (plan.n_local, plan.cin,
+                                                plan.cout)
+    # local window: slab + K-1 tail
+    assert plan.local_in_rows == plan.slab_rows + (k - 1)
+    assert plan.local_flops == 2 * plan.local_macs
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch_shards=st.sampled_from([3, 5, 7]))
+def test_sharded_plan_rejects_indivisible_batch(batch_shards):
+    try:
+        ShardedConvPlan.build((4, 12, 12, 4), (3, 3, 4, 8),
+                              batch_shards=batch_shards)
+    except ValueError:
+        return
+    assert 4 % batch_shards == 0
 
 
 # ---------------------------------------------------------------------------
