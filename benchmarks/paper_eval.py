@@ -1,0 +1,244 @@
+"""Paper-fidelity Ops/MAcc evaluation — the 3D-TrIM headline claim.
+
+Renders the paper's network-level comparison (arXiv:2502.18983 §V,
+per-layer accounting per the TrIM analytical-modelling companion,
+arXiv:2408.01254) for whole CNN topologies, from the same
+:class:`~repro.core.netplan.NetworkPlan` objects the execution engine
+plans with:
+
+* **arch** rows — the architectural access model (Fig. 6 / §V): Ops per
+  memory access of the 3D-TrIM ASIC configuration (8x8, shadow
+  registers, 64 slices) vs the TrIM configuration (7x24, 168 slices),
+  per layer and whole-network, with the per-slice improvement ratio the
+  paper reports (up to ~3.4x on the favorable layers; the whole-network
+  ratio lands ~3.2-3.3x).
+
+* **plan** rows — the TPU execution engine's strip-level image of the
+  same tradeoff: whole-network HBM traffic and Ops/MAcc of every
+  layer's ``ConvPlan`` under ``mode="3dtrim"`` (shadow-register carry,
+  zero halo) vs ``mode="trim"`` (K-1 halo rows re-fetched per strip),
+  with the NetworkPlan's inter-layer residency decisions applied, plus
+  the summed network roofline.  ``--shards`` plans every layer as a
+  ``ShardedConvPlan`` and reports the cross-device halo wire bytes.
+
+* **sim** rows (``--measured``) — cycle-level validation: the
+  :class:`~repro.core.dataflow.TrimSliceSim` functional simulator runs
+  one slice per unique stride-1 layer geometry in both modes and its
+  *counted* external reads are compared against the analytical
+  prediction (they must agree exactly).
+
+Run:
+
+  PYTHONPATH=src python benchmarks/paper_eval.py --net vgg16 --net alexnet
+  PYTHONPATH=src python benchmarks/paper_eval.py --measured --json OUT.json
+
+``--json`` writes the artifact CI uploads next to the ``benchmarks/run.py``
+bench JSONs; every row carries explicit ``kind`` / ``mode`` / ``dataflow``
+columns (schema documented in DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:                                    # python benchmarks/paper_eval.py
+    from run import _git_rev
+except ImportError:                     # imported as benchmarks.paper_eval
+    from benchmarks.run import _git_rev
+
+
+def arch_rows(netplan) -> tuple[list[dict], dict]:
+    """The Fig. 6 / §V architectural comparison as flat JSON rows."""
+    cmp = netplan.arch_compare()
+    rows = []
+    for r in cmp["layers"]:
+        rows.append(dict(
+            kind="arch", network=netplan.name, layer=r["layer"],
+            label=r["label"], mode="both", dataflow="n/a", ops=r["ops"],
+            accesses_3dtrim=r["accesses"]["3d-trim"],
+            accesses_trim=r["accesses"]["trim"],
+            ops_per_macc_3dtrim=r["ops_per_macc"]["3d-trim"],
+            ops_per_macc_trim=r["ops_per_macc"]["trim"],
+            improvement=r["improvement"]))
+    return rows, cmp
+
+
+def plan_rows(netplan) -> tuple[list[dict], dict]:
+    """The execution engine's ConvPlan-level comparison as JSON rows."""
+    cmp = netplan.compare()
+    rows = []
+    for mode in ("3dtrim", "trim"):
+        for r in netplan.as_rows(mode):
+            rows.append(dict(kind="plan", network=netplan.name, **r))
+    return rows, cmp
+
+
+def sim_rows(netplan, cap: int = 14) -> list[dict]:
+    """Cycle-measured Ops/MAcc per unique stride-1 layer geometry: one
+    TrimSliceSim slice pass per mode, counted reads vs the analytical
+    model (the `measured` column of the paper evaluation)."""
+    import numpy as np
+    from repro.core.conv_plan import slice_reads_per_channel
+    from repro.core.dataflow import TrimSliceSim
+    rng = np.random.default_rng(0)
+    rows, seen = [], set()
+    for s in netplan.steps:
+        l = s.layer
+        size = min(l.ifmap, cap)
+        geo = (size, l.kernel, l.stride)
+        if l.stride != 1 or geo in seen:
+            continue            # the simulator models stride-1 slices
+        seen.add(geo)
+        ifmap = rng.standard_normal((size, size))
+        w = rng.standard_normal((l.kernel, l.kernel))
+        for mode in ("3dtrim", "trim"):
+            sim = TrimSliceSim(l.kernel, mode)
+            _, stats = sim.run(ifmap, w)
+            predicted = slice_reads_per_channel(
+                size, size, l.kernel, 1, shadow=(mode == "3dtrim"))
+            rows.append(dict(
+                kind="sim", network=netplan.name, layer=s.name,
+                label=f"(I{size},K{l.kernel})", mode=mode,
+                dataflow="carry" if mode == "3dtrim" else "halo",
+                measured_reads=stats.memory_reads,
+                predicted_reads=predicted,
+                measured_ops_per_macc=stats.ops_per_memory_access,
+                exact=stats.memory_reads == predicted))
+            assert stats.memory_reads == predicted, \
+                (s.name, mode, stats.memory_reads, predicted)
+    return rows
+
+
+def evaluate(net: str, *, batch: int = 1, residency: str = "auto",
+             shards: int = 1, measured: bool = False,
+             use_autotune_cache: bool = False) -> dict:
+    """Full evaluation of one topology; returns rows + network summary."""
+    from repro.core import NetworkPlan
+    from repro.core.roofline import network_roofline
+    netplan = NetworkPlan.build(
+        net, n=batch, residency=residency, spatial_shards=shards,
+        use_autotune_cache=use_autotune_cache)
+    a_rows, a_cmp = arch_rows(netplan)
+    p_rows, p_cmp = plan_rows(netplan)
+    rows = a_rows + p_rows
+    if measured:
+        rows += sim_rows(netplan)
+    terms = network_roofline(net, netplan)
+    t = netplan.hbm_bytes()
+    summary = dict(
+        network=net, batch=batch, residency=residency, shards=shards,
+        layers=netplan.n_layers, macs=netplan.macs, ops=netplan.ops,
+        hbm_total=t["total"], halo=t["halo"],
+        arch=dict(ops_per_macc=a_cmp["ops_per_macc"],
+                  ops_per_macc_per_slice=a_cmp["ops_per_macc_per_slice"],
+                  improvement=a_cmp["improvement"],
+                  max_layer_improvement=max(
+                      r["improvement"] for r in a_cmp["layers"])),
+        plan=dict(ops_per_macc_3dtrim=p_cmp["ops_per_macc_3dtrim"],
+                  ops_per_macc_trim=p_cmp["ops_per_macc_trim"],
+                  improvement=p_cmp["improvement"]),
+        roofline=dict(t_compute_s=terms.t_compute,
+                      t_memory_s=terms.t_memory,
+                      t_collective_s=terms.t_collective,
+                      dominant=terms.dominant))
+    return dict(rows=rows, summary=summary)
+
+
+def render(summary: dict, rows: list[dict]) -> None:
+    net = summary["network"]
+    print(f"\n== {net} ({summary['layers']} conv layers, "
+          f"{summary['macs']/1e9:.2f} GMAC, batch {summary['batch']}, "
+          f"residency={summary['residency']}) ==")
+    print("  per-layer Ops/MAcc (arch accounting, Fig. 6 / SV):")
+    for r in rows:
+        if r["kind"] != "arch":
+            continue
+        print(f"    {r['layer']:>7s} {r['label']:>18s}: "
+              f"3D-TrIM {r['ops_per_macc_3dtrim']:8.1f}  "
+              f"TrIM {r['ops_per_macc_trim']:8.1f}  "
+              f"improvement {r['improvement']:.2f}x")
+    a = summary["arch"]
+    print(f"  whole-network Ops/MAcc: "
+          f"3D-TrIM {a['ops_per_macc']['3d-trim']:.1f} vs "
+          f"TrIM {a['ops_per_macc']['trim']:.1f}  ->  "
+          f"{a['improvement']:.2f}x per slice "
+          f"(max layer {a['max_layer_improvement']:.2f}x)")
+    p = summary["plan"]
+    print(f"  execution engine (ConvPlan strips): Ops/MAcc "
+          f"3dtrim {p['ops_per_macc_3dtrim']:.1f} vs "
+          f"trim {p['ops_per_macc_trim']:.1f} "
+          f"({p['improvement']:.3f}x), HBM {summary['hbm_total']/1e6:.1f} MB"
+          + (f", halo wire {summary['halo']/1e6:.2f} MB"
+             if summary["halo"] else ""))
+    rf = summary["roofline"]
+    print(f"  network roofline: T_comp {rf['t_compute_s']*1e3:.2f} ms "
+          f"T_mem {rf['t_memory_s']*1e3:.2f} ms -> {rf['dominant']}-bound")
+    sims = [r for r in rows if r["kind"] == "sim"]
+    if sims:
+        ok = all(r["exact"] for r in sims)
+        print(f"  cycle-sim validation: {len(sims)} slice passes, "
+              f"counted reads == analytical: {ok}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", action="append", default=None,
+                    choices=["vgg16", "alexnet", "mobilenet"],
+                    help="topology to evaluate (repeatable; default "
+                         "vgg16 + alexnet, the paper's networks)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--residency", default="auto",
+                    choices=["auto", "never", "always"])
+    ap.add_argument("--shards", type=int, default=1,
+                    help="spatial shards: plan layers as ShardedConvPlan "
+                         "and report cross-device halo wire bytes")
+    ap.add_argument("--measured", action="store_true",
+                    help="run the cycle simulator per unique geometry "
+                         "and check counted reads == analytical")
+    ap.add_argument("--use-autotune-cache", action="store_true",
+                    help="fill per-layer tile/dataflow knobs from the "
+                         "persisted autotune records")
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    args = ap.parse_args()
+    nets = args.net or ["vgg16", "alexnet"]
+
+    all_rows, summaries = [], []
+    for net in nets:
+        res = evaluate(net, batch=args.batch, residency=args.residency,
+                       shards=args.shards, measured=args.measured,
+                       use_autotune_cache=args.use_autotune_cache)
+        render(res["summary"], res["rows"])
+        all_rows += res["rows"]
+        summaries.append(res["summary"])
+
+    # the acceptance gate of the reproduction: the 3dtrim/trim ratio must
+    # sit in the paper's claimed range on every network evaluated
+    for s in summaries:
+        assert s["arch"]["improvement"] > 1.0, s
+        assert s["plan"]["improvement"] >= 1.0, s
+        assert s["arch"]["max_layer_improvement"] < 3.6, s
+    claimed = max(s["arch"]["max_layer_improvement"] for s in summaries)
+    print(f"\npaper claim check: best layer improvement {claimed:.2f}x "
+          f"(paper: up to 3.37x), every network ratio > 1  [OK]")
+
+    if args.json:
+        payload = dict(rev=_git_rev(),
+                       timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       nets=nets, batch=args.batch,
+                       residency=args.residency, shards=args.shards,
+                       summaries=summaries, rows=all_rows)
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(all_rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

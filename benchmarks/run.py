@@ -28,7 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Run: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json OUT.json]
 ``--smoke`` runs a fast CI subset (analytical models + one tiny kernel).
 ``--json OUT.json`` additionally writes the rows as machine-readable JSON
-(name/us/derived + git rev) — the perf-trajectory artifact CI uploads.
+(name/us/derived + optional structured columns such as dataflow/mode on
+conv and shard rows, + git rev) — the perf-trajectory artifact CI
+uploads; the row schema is documented in DESIGN.md §7.  The
+whole-network paper evaluation (per-layer and network Ops/MAcc, trim vs
+3dtrim) is its own entry point, ``benchmarks/paper_eval.py``.
 """
 
 from __future__ import annotations
@@ -130,7 +134,8 @@ def bench_kernels(emit, smoke: bool = False):
             x, w, impl="pallas", dataflow=df,
             use_autotune_cache=False).block_until_ready())
         emit(f"kernel_conv2d_{df}_interp", us_df[df],
-             f"oracle={us_r:.0f}us|ratio={us_df[df] / us_r:.2f}")
+             f"oracle={us_r:.0f}us|ratio={us_df[df] / us_r:.2f}",
+             dataflow=df, mode="3dtrim" if df == "carry" else "trim")
     us_k = us_df["carry"]   # seed default dataflow
 
     us_f = _time(lambda: ops.conv2d(
@@ -267,16 +272,19 @@ def bench_sharded(emit):
         plan = ShardedConvPlan.build(kshape, w.shape, spatial_shards=ndev)
         t = plan.sharded_traffic()
         terms = sharded_conv_roofline(f"shard_d{ndev}", plan)
+        # every shard row carries its dataflow + traffic-accounting mode
+        # as structured JSON columns (DESIGN.md §7 row schema)
+        tags = dict(dataflow=plan.dataflow, mode=plan.traffic_mode)
         if ndev == 1:
             bt = base.hbm_bytes()
             exact = (t["halo"] == 0 and t["total"] == bt["total"]
                      and t["input"] == bt["input"])
             assert exact, (t, bt)
             emit("shard_plan_reduction_d1", 0.0,
-                 f"halo=0B|matches_convplan={exact}")
+                 f"halo=0B|matches_convplan={exact}", **tags)
         if ndev > n_avail:
             emit(f"shard_conv2d_d{ndev}", 0.0,
-                 f"halo={t['halo']}B|skipped(devices={n_avail})")
+                 f"halo={t['halo']}B|skipped(devices={n_avail})", **tags)
             continue
         from repro.launch.mesh import make_conv_mesh
         mesh = make_conv_mesh(1, ndev)
@@ -293,7 +301,7 @@ def bench_sharded(emit):
              f"hbm={t['hbm_total']}B|"
              f"halo_per_dev={plan.halo_bytes_per_device:.0f}B|"
              f"t_coll={terms.t_collective * 1e6:.2f}us|"
-             f"dom={terms.dominant}")
+             f"dom={terms.dominant}", **tags)
 
 
 def bench_roofline(emit):
@@ -349,9 +357,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     rows = []
 
-    def emit(name, us, derived):
+    def emit(name, us, derived, **extra):
+        """One bench row.  CSV stays (name, us, derived); ``extra``
+        key/values (e.g. dataflow=, mode=) ride along as structured
+        columns in the --json artifact (schema: DESIGN.md §7)."""
         print(f"{name},{us:.1f},{derived}")
-        rows.append(dict(name=name, us=round(us, 1), derived=derived))
+        rows.append(dict(name=name, us=round(us, 1), derived=derived,
+                         **extra))
 
     if args.shard:
         bench_sharded(emit)

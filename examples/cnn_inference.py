@@ -1,22 +1,38 @@
-"""The paper's own workload: VGG-16-style CNN inference running through
-the trim_conv2d Pallas kernel — bias + ReLU fused into the kernel epilogue,
+"""The paper's own workload: CNN inference running through the
+trim_conv2d Pallas kernel — bias + ReLU fused into the kernel epilogue,
 a MobileNet-style depthwise-separable block on the grouped-conv path, and
-the per-layer OPs/Access accounting of Fig. 6 printed alongside.
+the paper's Ops/Access accounting printed alongside.
 
-This is the closed loop of the conv execution engine (DESIGN.md §4):
+This is the closed loop of the conv execution engine (DESIGN.md §4/§7):
 each layer is autotuned once (model-guided (tile_h, tile_cout, dataflow)
 search persisted in a JSON cache), weights are pre-packed into the
 kernel's padded layout at load time, and the forward pass then runs
 entirely on packed params and cached plans — ``ops.conv2d`` finds every
 knob in the cache.
 
-Every traffic/arithmetic-intensity number comes from the same ``ConvPlan``
-objects the kernels execute.
+Two modes:
 
   PYTHONPATH=src python examples/cnn_inference.py
+      the original demo: a reduced VGG-16 head + depthwise block, plus
+      the full-scale per-layer Fig. 6 accounting.
+
+  PYTHONPATH=src python examples/cnn_inference.py --net vgg16 [--scale 8]
+      the whole-network engine: run the FULL topology (every conv layer,
+      real spatial dims / strides / pooling, channels divided by
+      ``--scale`` so CPU interpret mode stays fast) on tuned, packed
+      plans, then print the ``NetworkPlan`` whole-network accounting —
+      HBM traffic, residency decisions and the paper's trim-vs-3dtrim
+      Ops/MAcc comparison — for the full-scale configuration.
+
+Every traffic/arithmetic-intensity number comes from the same ``ConvPlan``
+objects the kernels execute.
 """
 
-import sys, os
+import argparse
+import os
+import sys
+import time
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # keep the example's tuning records repo-local (and the run reproducible)
 os.environ.setdefault("REPRO_CONVTUNE_CACHE", os.path.join(
@@ -26,68 +42,150 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import autotune, compare_layer, mobilenet_layers, vgg16_layers
-from repro.core.roofline import conv_plan_roofline
+from repro.core import (NetworkPlan, autotune, compare_layer,
+                        mobilenet_layers, network_layers, scale_layers,
+                        vgg16_layers)
+from repro.core.roofline import conv_plan_roofline, network_roofline
 from repro.models import layers
-
-rng = jax.random.PRNGKey(0)
-
-# a reduced VGG-16 head (channel counts /8, 32x32 input) that runs in
-# seconds on CPU interpret mode; the access accounting uses full configs
-x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 32, 32, 3)),
-                jnp.float32)
-channels = [8, 8, 16, 16, 32]
 from repro.models.base import init_params
 
-# load time: tune each layer's plan once (persisted), pack each layer's
-# weights into the kernel layout once
-packed, shapes, cur = [], [], x.shape
-for i, c in enumerate(channels):
-    p = init_params(layers.conv2d_params(3, cur[-1], c),
-                    jax.random.fold_in(rng, i))
-    w_shape = p["w"].shape
-    kshape, pad = (cur[0], cur[1] + 2, cur[2] + 2, cur[3]), 0  # 'same', K=3
-    autotune.tune(kshape, w_shape, stride=1, pad=pad)
-    packed.append(layers.conv2d_pack_params(p, x_shape=cur))
-    shapes.append(cur)
-    hw = (cur[1] // 2, cur[2] // 2) if i % 2 == 1 else (cur[1], cur[2])
-    cur = (cur[0], *hw, c)
 
-# inference: packed params + cached plans only
-for i, p in enumerate(packed):
-    x = layers.conv2d_apply(p, x, activation="relu")   # fused bias+ReLU
-    if i % 2 == 1:
-        x = x[:, ::2, ::2, :]          # poor man's maxpool (stride slice)
-print("reduced VGG head output:", x.shape, "mean", float(x.mean()))
-rec = autotune.knobs_for((1, 34, 34, 3), (3, 3, 3, 8), stride=1, pad=0)
-print("layer-0 cached plan:", rec)
+def run_network(net: str, scale: int, batch: int) -> None:
+    """The whole-network path: tune every layer, pack every weight, run
+    the full topology, print the NetworkPlan evaluation."""
+    full = network_layers(net)
+    topo = scale_layers(full, scale)
+    image = topo[0].ifmap
 
-# depthwise-separable block (MobileNet scenario, grouped kernel path),
-# same treatment: pack both convs at load time
-p = init_params(layers.depthwise_separable_params(3, x.shape[-1], 64),
-                jax.random.fold_in(rng, 99))
-p = layers.depthwise_separable_pack_params(p, x_shape=x.shape, stride=2)
-y = layers.depthwise_separable_apply(p, x, stride=2)
-print("depthwise-separable block output:", y.shape, "mean", float(y.mean()))
+    t0 = time.perf_counter()
+    recs = autotune.tune_network(topo, n=batch)
+    tuned = sum(1 for r in recs.values() if "skipped" not in r)
+    print(f"tuned {tuned}/{len(topo)} layers in "
+          f"{time.perf_counter() - t0:.2f}s "
+          f"(skipped: {[k for k, r in recs.items() if 'skipped' in r]})")
 
-print("\nFull VGG-16 per-layer OPs/Access/Slice (Fig. 6a):")
-for layer in vgg16_layers():
-    row = compare_layer(layer)
-    print(f"  {row['layer']:>18s}: 3D-TrIM {row['3d-trim']:.2f} "
-          f"vs TrIM {row['trim']:.2f}  ({row['improvement']:.2f}x)")
+    params = init_params(layers.cnn_params_from_layers(topo),
+                         jax.random.PRNGKey(0))
+    params = layers.cnn_pack_params(params, topo, n=batch)
 
-print("\nTPU-side ConvPlan traffic + roofline (same plan the kernel runs):")
-for layer in [vgg16_layers()[1]] + mobilenet_layers()[:2]:
-    for dataflow in ("carry", "halo"):
-        plan = layer.plan(dataflow=dataflow)
-        t = plan.hbm_bytes()
-        print(f"  {layer.name:>6s} [{dataflow:5s}]: input "
-              f"{t['input']/1e6:7.1f} MB "
-              f"(halo overhead {t['overhead_pct']:4.1f}%)  "
-              f"AI {plan.arithmetic_intensity():7.1f} flop/B")
-    plan = layer.plan()
-    terms = conv_plan_roofline(layer.name, plan)
-    print(f"  {layer.name:>6s} roofline: T_comp {terms.t_compute*1e6:.0f} us "
-          f"T_mem {terms.t_memory*1e6:.0f} us -> {terms.dominant}-bound, "
-          f"grid {plan.grid}, tile_h {plan.tile_h}, "
-          f"VMEM {plan.vmem_resident_bytes/2**20:.1f} MiB")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (batch, image, image, topo[0].in_channels)), jnp.float32)
+    t0 = time.perf_counter()
+    y = layers.cnn_apply_from_layers(params, topo, x)
+    y.block_until_ready()
+    print(f"{net} x{scale} forward (batch {batch}, {len(topo)} convs, "
+          f"packed+tuned): {y.shape}, mean {float(y.mean()):.4f}, "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    # the full-scale analytical evaluation of the same topology
+    plan = NetworkPlan.build(net, n=batch)
+    cmp, arch = plan.compare(), plan.arch_compare()
+    t = plan.hbm_bytes()
+    resident = [s.name for s in plan.steps if s.resident_out]
+    print(f"\nNetworkPlan ({net}, full scale, batch {batch}, "
+          f"residency=auto):")
+    print(f"  HBM {t['total']/1e6:.1f} MB "
+          f"(input {t['input']/1e6:.1f} / weights {t['weights']/1e6:.1f} "
+          f"/ output {t['output']/1e6:.1f}); "
+          f"resident boundaries: {resident or 'none'}")
+    print(f"  Ops/MAcc (engine strips): 3dtrim "
+          f"{cmp['ops_per_macc_3dtrim']:.1f} vs trim "
+          f"{cmp['ops_per_macc_trim']:.1f} ({cmp['improvement']:.3f}x)")
+    print(f"  Ops/MAcc (paper arch model): 3D-TrIM "
+          f"{arch['ops_per_macc']['3d-trim']:.1f} vs TrIM "
+          f"{arch['ops_per_macc']['trim']:.1f} -> "
+          f"{arch['improvement']:.2f}x per slice")
+    terms = network_roofline(net, plan)
+    print(f"  roofline: T_comp {terms.t_compute*1e3:.2f} ms, "
+          f"T_mem {terms.t_memory*1e3:.2f} ms -> {terms.dominant}-bound")
+
+
+def run_demo() -> None:
+    """The original reduced-head demo (kept as the default)."""
+    rng = jax.random.PRNGKey(0)
+
+    # a reduced VGG-16 head (channel counts /8, 32x32 input) that runs in
+    # seconds on CPU interpret mode; the access accounting uses full
+    # configs
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((1, 32, 32, 3)),
+        jnp.float32)
+    channels = [8, 8, 16, 16, 32]
+
+    # load time: tune each layer's plan once (persisted), pack each
+    # layer's weights into the kernel layout once
+    packed, cur = [], x.shape
+    for i, c in enumerate(channels):
+        p = init_params(layers.conv2d_params(3, cur[-1], c),
+                        jax.random.fold_in(rng, i))
+        kshape = (cur[0], cur[1] + 2, cur[2] + 2, cur[3])  # 'same', K=3
+        autotune.tune(kshape, p["w"].shape, stride=1, pad=0)
+        packed.append(layers.conv2d_pack_params(p, x_shape=cur))
+        hw = (cur[1] // 2, cur[2] // 2) if i % 2 == 1 else (cur[1], cur[2])
+        cur = (cur[0], *hw, c)
+
+    # inference: packed params + cached plans only
+    for i, p in enumerate(packed):
+        x = layers.conv2d_apply(p, x, activation="relu")  # fused bias+ReLU
+        if i % 2 == 1:
+            x = x[:, ::2, ::2, :]      # poor man's maxpool (stride slice)
+    print("reduced VGG head output:", x.shape, "mean", float(x.mean()))
+    rec = autotune.knobs_for((1, 34, 34, 3), (3, 3, 3, 8), stride=1, pad=0)
+    print("layer-0 cached plan:", rec)
+
+    # depthwise-separable block (MobileNet scenario, grouped kernel
+    # path), same treatment: pack both convs at load time
+    p = init_params(layers.depthwise_separable_params(3, x.shape[-1], 64),
+                    jax.random.fold_in(rng, 99))
+    p = layers.depthwise_separable_pack_params(p, x_shape=x.shape,
+                                               stride=2)
+    y = layers.depthwise_separable_apply(p, x, stride=2)
+    print("depthwise-separable block output:", y.shape,
+          "mean", float(y.mean()))
+
+    print("\nFull VGG-16 per-layer OPs/Access/Slice (Fig. 6a):")
+    for layer in vgg16_layers():
+        row = compare_layer(layer)
+        print(f"  {row['layer']:>18s}: 3D-TrIM {row['3d-trim']:.2f} "
+              f"vs TrIM {row['trim']:.2f}  ({row['improvement']:.2f}x)")
+
+    print("\nTPU-side ConvPlan traffic + roofline "
+          "(same plan the kernel runs):")
+    for layer in [vgg16_layers()[1]] + mobilenet_layers()[:2]:
+        for dataflow in ("carry", "halo"):
+            plan = layer.plan(dataflow=dataflow)
+            t = plan.hbm_bytes()
+            print(f"  {layer.name:>6s} [{dataflow:5s}]: input "
+                  f"{t['input']/1e6:7.1f} MB "
+                  f"(halo overhead {t['overhead_pct']:4.1f}%)  "
+                  f"AI {plan.arithmetic_intensity():7.1f} flop/B")
+        plan = layer.plan()
+        terms = conv_plan_roofline(layer.name, plan)
+        print(f"  {layer.name:>6s} roofline: "
+              f"T_comp {terms.t_compute*1e6:.0f} us "
+              f"T_mem {terms.t_memory*1e6:.0f} us -> "
+              f"{terms.dominant}-bound, "
+              f"grid {plan.grid}, tile_h {plan.tile_h}, "
+              f"VMEM {plan.vmem_resident_bytes/2**20:.1f} MiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default=None,
+                    choices=["vgg16", "alexnet", "mobilenet"],
+                    help="run a full topology on tuned, packed plans "
+                         "(default: the reduced-head demo)")
+    ap.add_argument("--scale", type=int, default=8,
+                    help="divide channel counts by this for the "
+                         "executed configuration (accounting stays "
+                         "full-scale)")
+    ap.add_argument("--batch", type=int, default=1)
+    args = ap.parse_args()
+    if args.net:
+        run_network(args.net, args.scale, args.batch)
+    else:
+        run_demo()
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,17 @@ neighbor devices before each per-shard Pallas kernel.  The modeled
 cross-device halo bytes) is printed next to the measured throughput so
 the analytical and observed costs sit side by side.
 
+``--net vgg16|alexnet`` swaps the small CNN for a full paper topology
+(every conv layer, real spatial dims and pooling; channels divided by
+``--scale``) running on tuned, packed plans — the whole-network
+execution engine of DESIGN.md §7 behind the same batching loop.  Packed
+weights freeze a single-device layout, so ``--net`` serves single-device
+(no mesh); the default simple CNN keeps the sharded path.
+
   PYTHONPATH=src python examples/serve_cnn.py --devices 4 --data 2 \
       --spatial 2 --requests 64 --batch 16
+  PYTHONPATH=src python examples/serve_cnn.py --net vgg16 --scale 16 \
+      --requests 8 --batch 4
 """
 
 import argparse
@@ -30,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import NetworkPlan, autotune, scale_layers, network_layers
 from repro.core.conv_shard import ShardedConvPlan
 from repro.core.roofline import sharded_conv_roofline
 from repro.kernels import ops
@@ -53,44 +63,75 @@ def main() -> None:
                     help="total images queued")
     ap.add_argument("--batch", type=int, default=8,
                     help="serving batch size (requests pad up to it)")
+    ap.add_argument("--net", default=None,
+                    choices=["vgg16", "alexnet", "mobilenet"],
+                    help="serve a full paper topology on tuned, packed "
+                         "plans (single-device; default: the small "
+                         "sharded CNN)")
+    ap.add_argument("--scale", type=int, default=16,
+                    help="channel divisor for the executed --net "
+                         "configuration")
     args = ap.parse_args()
 
     mesh = None
     if args.data * args.spatial > 1:
+        if args.net:
+            raise SystemExit("--net serves packed single-device plans; "
+                             "drop --data/--spatial")
         mesh = make_conv_mesh(args.data, args.spatial)
         if args.batch % args.data:
             raise SystemExit(f"--batch {args.batch} must divide over "
                              f"--data {args.data}")
 
-    params = init_params(
-        layers.simple_cnn_params(cin=CIN, channels=CHANNELS,
-                                 n_classes=N_CLASSES),
-        jax.random.PRNGKey(0))
+    if args.net:
+        topo = scale_layers(network_layers(args.net), args.scale)
+        image, cin = topo[0].ifmap, topo[0].in_channels
+        autotune.tune_network(topo, n=args.batch)
+        params = init_params(
+            layers.cnn_params_from_layers(topo, n_classes=N_CLASSES),
+            jax.random.PRNGKey(0))
+        params = layers.cnn_pack_params(params, topo, n=args.batch)
+        netplan = NetworkPlan.build(args.net, n=args.batch)
+        t = netplan.hbm_bytes()
+        print(f"{args.net} NetworkPlan @ batch {args.batch} (full scale): "
+              f"hbm={t['total']/1e6:.1f}MB, Ops/MAcc 3dtrim "
+              f"{netplan.ops_per_macc('3dtrim'):.1f} vs trim "
+              f"{netplan.ops_per_macc('trim'):.1f}")
+    else:
+        topo, image, cin = None, IMAGE, CIN
+        params = init_params(
+            layers.simple_cnn_params(cin=CIN, channels=CHANNELS,
+                                     n_classes=N_CLASSES),
+            jax.random.PRNGKey(0))
 
-    # the modeled sharded traffic of the first conv layer at this batch
-    kshape, _ = ops.kernel_input_shape(
-        (args.batch, IMAGE, IMAGE, CIN), 3, 1, "same")
-    plan = ShardedConvPlan.build(kshape, (3, 3, CIN, CHANNELS[0]),
-                                 batch_shards=args.data,
-                                 spatial_shards=args.spatial)
-    traffic = plan.sharded_traffic()
-    terms = sharded_conv_roofline("conv0", plan)
-    print(f"conv0 plan @ batch {args.batch}: hbm={traffic['hbm_total']}B "
-          f"halo={traffic['halo']}B "
-          f"({plan.halo_bytes_per_device:.0f}B/dev, "
-          f"t_coll={terms.t_collective * 1e6:.2f}us, "
-          f"dominant={terms.dominant})")
+        # the modeled sharded traffic of the first conv layer at this
+        # batch
+        kshape, _ = ops.kernel_input_shape(
+            (args.batch, IMAGE, IMAGE, CIN), 3, 1, "same")
+        plan = ShardedConvPlan.build(kshape, (3, 3, CIN, CHANNELS[0]),
+                                     batch_shards=args.data,
+                                     spatial_shards=args.spatial)
+        traffic = plan.sharded_traffic()
+        terms = sharded_conv_roofline("conv0", plan)
+        print(f"conv0 plan @ batch {args.batch}: "
+              f"hbm={traffic['hbm_total']}B "
+              f"halo={traffic['halo']}B "
+              f"({plan.halo_bytes_per_device:.0f}B/dev, "
+              f"t_coll={terms.t_collective * 1e6:.2f}us, "
+              f"dominant={terms.dominant})")
 
     @jax.jit
     def forward(p, x):
+        if topo is not None:
+            return layers.cnn_apply_from_layers(p, topo, x)
         return layers.simple_cnn_apply(p, x, mesh=mesh)
 
     rng = np.random.default_rng(0)
     queue = rng.standard_normal(
-        (args.requests, IMAGE, IMAGE, CIN)).astype(np.float32)
+        (args.requests, image, image, cin)).astype(np.float32)
 
     # warmup compile on the fixed batch shape
-    forward(params, jnp.zeros((args.batch, IMAGE, IMAGE, CIN),
+    forward(params, jnp.zeros((args.batch, image, image, cin),
                               jnp.float32)).block_until_ready()
 
     served, preds, t0 = 0, [], time.perf_counter()
@@ -99,7 +140,7 @@ def main() -> None:
         real = len(chunk)
         if real < args.batch:            # pad the ragged final batch
             chunk = np.concatenate(
-                [chunk, np.zeros((args.batch - real, IMAGE, IMAGE, CIN),
+                [chunk, np.zeros((args.batch - real, image, image, cin),
                                  np.float32)])
         logits = forward(params, jnp.asarray(chunk))
         preds.append(np.asarray(logits[:real]).argmax(-1))
@@ -108,7 +149,9 @@ def main() -> None:
 
     preds = np.concatenate(preds)
     mesh_desc = (f"{args.data}x{args.spatial} (data x spatial)"
-                 if mesh is not None else "single device")
+                 if mesh is not None else
+                 f"single device ({args.net} x{args.scale})" if args.net
+                 else "single device")
     print(f"served {served} images in {dt:.2f}s "
           f"({served / dt:.1f} img/s) on {mesh_desc}; "
           f"class histogram {np.bincount(preds, minlength=N_CLASSES)}")

@@ -445,6 +445,82 @@ def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
     return record
 
 
+# ---------------------------------------------------------------------------
+# Whole-network sweep (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
+                 dtype_bytes: int = 4, backend: str | None = None,
+                 batch_shards: int = 1, spatial_shards: int = 1,
+                 measure: bool = False, include_backward: bool = False,
+                 write: bool = True, path: str | None = None) -> dict:
+    """Tune every conv layer of a topology in one sweep.
+
+    ``network`` is a name ("vgg16" | "alexnet" | "mobilenet") or an
+    explicit ``list[ConvLayer]`` (e.g. a :func:`~repro.core.netplan.
+    scale_layers` reduction).  Each layer is tuned over the *kernel-seen*
+    shape (the 'same' pre-pad folded in, exactly the key ``ops.conv2d``
+    looks up at call time), so after one sweep the whole forward pass of
+    ``examples/cnn_inference.py --net ...`` runs on cached plans.  With
+    a shard grid the records land under the ``conv2d_shard:`` namespace
+    instead.  Layers sharing a shape (VGG-16's repeated blocks) are
+    tuned once; layers with ``K > MAX_NATIVE_K`` (AlexNet's 11x11) run
+    on the kernel-tiled path that never consults the cache and are
+    recorded as skipped.  ``include_backward`` additionally seeds both
+    cotangent records per layer (:func:`tune_backward`).
+
+    Returns ``{layer_name: record}`` with ``record["key"]`` the cache
+    key written (or ``{"skipped": reason}``).
+    """
+    from repro.core.netplan import layer_kernel_problem, network_layers
+    from repro.kernels.ops import MAX_NATIVE_K
+    sharded = batch_shards > 1 or spatial_shards > 1
+    if measure and sharded:
+        raise ValueError(
+            "measure=True is not supported with a shard grid: "
+            "tune_sharded ranks by the sharded roofline model only")
+    results: dict[str, dict] = {}
+    seen: dict[str, dict] = {}
+    for layer in network_layers(network):
+        if layer.name in results:
+            # results are keyed by layer name; a silent overwrite would
+            # make the returned dict undercount the topology
+            raise ValueError(
+                f"duplicate layer name {layer.name!r} in topology; "
+                "give repeated blocks unique names")
+        if layer.kernel > MAX_NATIVE_K:
+            results[layer.name] = {
+                "skipped": f"K={layer.kernel} > {MAX_NATIVE_K}: "
+                           "kernel-tiled path (no cache)"}
+            continue
+        # the shared layer -> executed-problem mapping (raises on
+        # padding the execution path cannot reproduce)
+        x_shape, pad, w_shape, _ = layer_kernel_problem(layer, n=n)
+        op = "conv2d" if not sharded \
+            else sharded_key_op(batch_shards, spatial_shards)
+        key = make_key(x_shape, w_shape, stride=layer.stride, pad=pad,
+                       groups=layer.groups, dtype=dtype, backend=backend,
+                       op=op)
+        if key in seen:
+            results[layer.name] = seen[key]
+            continue
+        common = dict(stride=layer.stride, pad=pad, groups=layer.groups,
+                      dtype=dtype, dtype_bytes=dtype_bytes,
+                      backend=backend, write=write, path=path)
+        if sharded:
+            rec = tune_sharded(x_shape, w_shape,
+                               batch_shards=batch_shards,
+                               spatial_shards=spatial_shards, **common)
+        else:
+            rec = tune(x_shape, w_shape, measure=measure, **common)
+        rec = dict(rec, key=key)
+        if include_backward and not sharded:
+            rec["backward"] = tune_backward(x_shape, w_shape, **common)
+        seen[key] = rec
+        results[layer.name] = rec
+    return results
+
+
 def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                   groups: int = 1, dtype: str = "float32",
                   dtype_bytes: int = 4, backend: str | None = None,

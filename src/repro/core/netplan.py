@@ -1,0 +1,512 @@
+"""Whole-network execution + evaluation planning (DESIGN.md §7).
+
+Everything below `ConvPlan` models ONE convolution at a time.  The
+paper's headline claim, however, is a *network-level* number: 3D-TrIM
+delivers up to 3.37x more operations per memory access (Ops/MAcc) than
+TrIM on full CNN topologies like VGG-16 and AlexNet (arXiv:2502.18983
+SV; the per-layer accounting follows TrIM's analytical-modelling
+companion paper, arXiv:2408.01254).  This module chains the per-layer
+plans into that network view:
+
+* :class:`LayerStep` — one conv layer of a topology: its
+  :class:`~repro.core.conv_plan.ConvPlan` (or
+  :class:`~repro.core.conv_shard.ShardedConvPlan` when the network is
+  sharded over a device mesh) plus the *inter-layer* decisions that the
+  single-layer plan cannot see: whether the ifmap arrives from on-chip
+  residency instead of HBM, whether the (pooled) ofmap stays on-chip
+  for the next layer, and the pooling factor folded into the epilogue.
+
+* :class:`NetworkPlan` — the chained topology.  It decides inter-layer
+  residency (``residency="auto"``: an ofmap stays on-chip iff the
+  pooled activation fits the residency budget; ``"never"`` /
+  ``"always"`` override), aggregates whole-network HBM traffic, MACs
+  and the paper's Ops/MAcc metric for ``mode="trim"`` vs ``"3dtrim"``,
+  and carries the cross-device halo terms of sharded plans as a
+  separate wire-traffic column.
+
+* :func:`network_layers` / :func:`scale_layers` / :func:`infer_pools`
+  — topology helpers shared with the execution path
+  (``models/layers.py cnn_*_from_layers``) and the benchmarks.
+
+Counting conventions (DESIGN.md §7, tying back to §1): the Ops/MAcc
+denominator counts **ifmap reads + weight reads** in elements
+(accesses = bytes / dtype_bytes); output writes and psums are excluded,
+exactly as in the paper's metric.  One OP = one multiply or add
+(MAC = 2 OPs).  Residency and pooling folding therefore change the
+HBM *traffic* totals and the input side of Ops/MAcc, never the OPs.
+
+`autotune.tune_network` tunes every layer of a topology in one sweep so
+the execution engine (``examples/cnn_inference.py --net vgg16``) runs
+the whole forward pass on tuned, packed plans.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.conv_plan import STRIP_VMEM_BUDGET, ConvPlan
+from repro.core.conv_shard import ShardedConvPlan
+from repro.core.model import (ConvLayer, alexnet_layers, mobilenet_layers,
+                              vgg16_layers)
+
+NETWORKS = {"vgg16": vgg16_layers, "alexnet": alexnet_layers,
+            "mobilenet": mobilenet_layers}
+
+# Default budget for keeping an inter-layer activation on chip: the same
+# half-VMEM budget ConvPlan uses for its resident strip — the other half
+# of the core is already committed to the consumer's working set.
+RESIDENCY_BUDGET = STRIP_VMEM_BUDGET
+
+
+def network_layers(network) -> list[ConvLayer]:
+    """Resolve a topology: a name from :data:`NETWORKS` ("vgg16",
+    "alexnet", "mobilenet") or an explicit ``list[ConvLayer]`` passed
+    through unchanged."""
+    if isinstance(network, str):
+        if network not in NETWORKS:
+            raise ValueError(
+                f"unknown network {network!r}; have {sorted(NETWORKS)}")
+        return NETWORKS[network]()
+    return list(network)
+
+
+def scale_layers(layers, scale: int) -> list[ConvLayer]:
+    """Shrink a topology's channel counts by ``scale`` (spatial dims and
+    kernels unchanged) — the reduced configuration the CPU examples
+    execute while the accounting uses the full-scale plans.  The first
+    layer's input channels (the image) are kept; grouped layers keep
+    ``groups == channels`` (depthwise stays depthwise)."""
+    if scale <= 1:
+        return list(layers)
+    out: list[ConvLayer] = []
+    prev_out: int | None = None
+    for l in layers:
+        cin = l.in_channels if prev_out is None else prev_out
+        cout = max(1, l.out_channels // scale)
+        if l.groups == l.in_channels and l.groups > 1:
+            groups = cin                 # depthwise stays depthwise
+        else:
+            groups = math.gcd(l.groups, cin)   # must still divide cin
+        if groups > 1:
+            cout = -(-cout // groups) * groups  # round up to a multiple
+        out.append(ConvLayer(name=l.name, ifmap=l.ifmap, in_channels=cin,
+                             out_channels=cout, kernel=l.kernel,
+                             stride=l.stride, padding=l.padding,
+                             groups=groups))
+        prev_out = cout
+    return out
+
+
+def pool_between(layer: ConvLayer, nxt: ConvLayer) -> tuple[int, int]:
+    """Pooling ``(stride, window)`` between two consecutive conv layers,
+    inferred from the topology's spatial dims: ``stride = out // next_in``
+    and ``window = out - stride * (next_in - 1)`` — this recovers VGG's
+    2x2/s2 and AlexNet's overlapping 3x3/s2 max pooling exactly.
+    ``(1, 1)`` means no pooling at this boundary; a sub-2x boundary
+    (e.g. 5 -> 3) resolves to a genuine stride-1 overlapping pool."""
+    o, i = layer.out_size, nxt.ifmap
+    if o == i:
+        return 1, 1
+    s = o // i
+    if s < 1:
+        raise ValueError(
+            f"layer {layer.name} ofmap {o} smaller than {nxt.name} "
+            f"ifmap {i}: not a chainable topology")
+    w = o - s * (i - 1)
+    assert pooled_out_size(o, s, w) == i, (o, i, s, w)
+    return s, w
+
+
+def infer_pools(layers) -> list[tuple[int, int]]:
+    """Per-layer pooling ``(stride, window)`` list (last layer: (1, 1))."""
+    out = [pool_between(a, b) for a, b in zip(layers, layers[1:])]
+    return out + [(1, 1)]
+
+
+def pooled_out_size(h_out: int, stride: int, window: int) -> int:
+    """Spatial size after the (stride, window) max pool — the single
+    place the pooled-size rule lives (LayerStep.out_size and the
+    residency decision in NetworkPlan.build both read it).  ``(1, 1)``
+    is the no-pool identity; ``(1, window > 1)`` is a genuine stride-1
+    overlapping pool (a sub-2x boundary like 5 -> 3 via 3x3/s1)."""
+    if stride == 1 and window == 1:
+        return h_out
+    return (h_out - window) // stride + 1
+
+
+def layer_kernel_problem(layer: ConvLayer, *, n: int = 1):
+    """The conv problem ``ops.conv2d`` actually executes for one
+    topology layer: ``(x_shape, pad, w_shape, padding)`` with
+    ``x_shape`` the kernel-seen input (the ``padding`` mode's pre-pad
+    folded in), ``pad`` the residual symmetric padding (0) and
+    ``padding`` the ``ops.conv2d`` argument (``"same"`` for
+    ``layer.padding > 0``, else ``"valid"``).
+
+    This is the single place the layer -> executed-problem mapping
+    lives: ``autotune.tune_network`` keys its records over these shapes,
+    ``NetworkPlan(use_autotune_cache=True)`` looks them up over the same
+    shapes, and ``models/layers.py cnn_*_from_layers`` run the same
+    ``padding`` mode — so records can never be written under one key and
+    read under another.
+
+    Raises ``ValueError`` when the layer's symmetric paper padding is
+    not reproduced by that mode (executed output size would differ from
+    ``layer.out_size``) — the execution engine supports
+    'same'-equivalent or zero padding, and anything else must fail
+    loudly instead of silently running a different network.
+    """
+    from repro.kernels.ops import kernel_input_shape
+    padding = "same" if layer.padding else "valid"
+    x_shape, pad = kernel_input_shape(
+        (n, layer.ifmap, layer.ifmap, layer.in_channels), layer.kernel,
+        layer.stride, padding)
+    out = (x_shape[1] + 2 * pad - layer.kernel) // layer.stride + 1
+    if out != layer.out_size:
+        raise ValueError(
+            f"layer {layer.name}: padding={layer.padding} is not "
+            f"{padding!r}-equivalent (executed output {out} != planned "
+            f"{layer.out_size}); the execution engine runs 'same' or "
+            f"zero padding only")
+    w_shape = (layer.kernel, layer.kernel,
+               layer.in_channels // layer.groups, layer.out_channels)
+    return x_shape, pad, w_shape, padding
+
+
+# ---------------------------------------------------------------------------
+# One chained layer
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerStep:
+    """One conv layer of a :class:`NetworkPlan`.
+
+    ``plan`` is the single-layer :class:`ConvPlan` (or
+    :class:`ShardedConvPlan`); the step adds the inter-layer decisions:
+
+    * ``resident_in`` — the ifmap arrives from the previous layer's
+      on-chip residency: its HBM input bytes (including any
+      ``mode="trim"`` halo re-fetch) are not billed.
+    * ``resident_out`` — the (pooled) ofmap stays on-chip as the next
+      layer's ifmap: its HBM output bytes are not billed.
+    * ``pool`` / ``pool_window`` — max-pooling folded into the epilogue;
+      with ``fold_pooling`` the output bytes billed are the *pooled*
+      activation (the elements the network actually keeps), else the
+      full ofmap the plan writes.
+    """
+
+    index: int
+    name: str
+    layer: ConvLayer
+    plan: ConvPlan
+    pool: int = 1
+    pool_window: int = 1
+    resident_in: bool = False
+    resident_out: bool = False
+    fold_pooling: bool = True
+
+    @property
+    def out_size(self) -> int:
+        """Spatial size of the (pooled) activation this step hands on."""
+        return pooled_out_size(self.plan.h_out, self.pool,
+                               self.pool_window)
+
+    @property
+    def out_elements(self) -> int:
+        return self.plan.n * self.out_size ** 2 * self.plan.cout
+
+    @property
+    def out_bytes(self) -> int:
+        """HBM bytes of the activation this step writes (0 if resident)."""
+        if self.resident_out:
+            return 0
+        if self.fold_pooling:
+            return self.out_elements * self.plan.dtype_bytes
+        return self.plan.hbm_bytes()["output"]
+
+    @property
+    def macs(self) -> int:
+        return self.plan.macs
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+    @property
+    def halo_bytes(self) -> int:
+        """Cross-device halo-exchange bytes (sharded plans only) — wire
+        traffic, kept out of the HBM Ops/MAcc denominator."""
+        if isinstance(self.plan, ShardedConvPlan):
+            return self.plan.halo_bytes_oneway
+        return 0
+
+    def hbm_bytes(self, mode: str | None = None) -> dict:
+        """This step's HBM byte terms under the network's residency and
+        pooling decisions.  ``mode`` follows :meth:`ConvPlan.hbm_bytes`
+        (``None`` accounts the plan's own dataflow)."""
+        t = self.plan.hbm_bytes(mode)
+        inp = 0 if self.resident_in else t["input"]
+        out = self.out_bytes
+        return dict(input=inp, weights=t["weights"], output=out,
+                    halo=self.halo_bytes,
+                    total=inp + t["weights"] + out)
+
+    def accesses(self, mode: str | None = None) -> int:
+        """Paper-metric memory accesses: ifmap + weight reads, in
+        elements (DESIGN.md §1/§7 — output writes and psums excluded)."""
+        t = self.hbm_bytes(mode)
+        return (t["input"] + t["weights"]) // self.plan.dtype_bytes
+
+    def ops_per_macc(self, mode: str | None = None) -> float:
+        """Operations per memory access of this layer (paper metric)."""
+        return self.ops / max(self.accesses(mode), 1)
+
+
+# ---------------------------------------------------------------------------
+# The chained network
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NetworkPlan:
+    """Per-layer ConvPlans chained across a full CNN topology.
+
+    Build with :meth:`build`; every aggregate below is a pure function
+    of the per-layer plans plus the residency/pooling decisions, so the
+    network numbers printed by ``benchmarks/paper_eval.py`` are exactly
+    the sums of the plans the kernels execute.
+
+    Example (doctested by the README quickstart)::
+
+        plan = NetworkPlan.build("vgg16")
+        plan.ops_per_macc("3dtrim") / plan.ops_per_macc("trim")  # > 1
+    """
+
+    name: str
+    steps: tuple
+    residency: str = "auto"
+
+    @classmethod
+    def build(cls, network="vgg16", *, n: int = 1, dtype_bytes: int = 4,
+              dataflow: str = "carry", residency: str = "auto",
+              residency_budget: int = RESIDENCY_BUDGET,
+              fold_pooling: bool = True,
+              batch_shards: int = 1, spatial_shards: int = 1,
+              use_autotune_cache: bool = False, dtype: str = "float32",
+              backend: str | None = None) -> "NetworkPlan":
+        """Plan a whole topology.
+
+        ``network`` is a name ("vgg16" | "alexnet" | "mobilenet") or an
+        explicit ``list[ConvLayer]``.  ``residency`` decides inter-layer
+        on-chip chaining: ``"auto"`` keeps an ofmap resident iff its
+        pooled activation fits ``residency_budget``; ``"never"`` spills
+        every boundary (whole-network traffic then reduces exactly to
+        the sum of the per-layer plans when ``fold_pooling=False``);
+        ``"always"`` forces every interior boundary resident.  With
+        ``batch_shards``/``spatial_shards`` every layer is planned as a
+        :class:`ShardedConvPlan` and the cross-device halo bytes ride
+        along as a separate wire-traffic term.  With
+        ``use_autotune_cache=True`` each layer's tile/dataflow knobs are
+        filled from the persisted autotune records
+        (:func:`repro.core.autotune.tune_network` writes them).
+        """
+        if residency not in ("auto", "never", "always"):
+            raise ValueError(f"residency={residency!r} must be "
+                             "'auto', 'never' or 'always'")
+        layers = network_layers(network)
+        if not layers:
+            raise ValueError("empty topology")
+        for a, b in zip(layers, layers[1:]):
+            if a.out_channels != b.in_channels:
+                raise ValueError(
+                    f"layer {a.name} ofmap channels {a.out_channels} != "
+                    f"{b.name} ifmap channels {b.in_channels}")
+        pools = infer_pools(layers)
+        sharded = batch_shards > 1 or spatial_shards > 1
+
+        plans = []
+        for layer in layers:
+            knobs = dict(tile_h=None, tile_cout=None, dataflow=dataflow)
+            if use_autotune_cache:
+                rec = _cached_knobs(layer, n=n, dtype=dtype,
+                                    backend=backend,
+                                    batch_shards=batch_shards,
+                                    spatial_shards=spatial_shards)
+                if rec is not None:
+                    knobs = dict(tile_h=rec["tile_h"],
+                                 tile_cout=rec["tile_cout"],
+                                 dataflow=rec["dataflow"])
+            x_shape = (n, layer.ifmap, layer.ifmap, layer.in_channels)
+            w_shape = (layer.kernel, layer.kernel,
+                       layer.in_channels // layer.groups,
+                       layer.out_channels)
+            build_kw = dict(stride=layer.stride, pad=layer.padding,
+                            groups=layer.groups, dtype_bytes=dtype_bytes,
+                            **knobs)
+            if sharded:
+                plans.append(ShardedConvPlan.build(
+                    x_shape, w_shape, batch_shards=batch_shards,
+                    spatial_shards=spatial_shards, **build_kw))
+            else:
+                plans.append(ConvPlan.build(x_shape, w_shape, **build_kw))
+
+        steps = []
+        last = len(layers) - 1
+        for i, (layer, plan, (ps, pw)) in enumerate(
+                zip(layers, plans, pools)):
+            pooled_bytes = (n * pooled_out_size(plan.h_out, ps, pw) ** 2
+                            * plan.cout * dtype_bytes)
+            if i == last:
+                keep = False            # the result leaves the accelerator
+            elif residency == "never":
+                keep = False
+            elif residency == "always":
+                keep = True
+            else:
+                keep = pooled_bytes <= residency_budget
+            steps.append(LayerStep(
+                index=i, name=layer.name, layer=layer, plan=plan,
+                pool=ps, pool_window=pw,
+                resident_in=bool(steps) and steps[-1].resident_out,
+                resident_out=keep, fold_pooling=fold_pooling))
+        nm = network if isinstance(network, str) else "custom"
+        return cls(name=nm, steps=tuple(steps), residency=residency)
+
+    # -- aggregates --------------------------------------------------------
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.steps)
+
+    @property
+    def macs(self) -> int:
+        return sum(s.macs for s in self.steps)
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+    def hbm_bytes(self, mode: str | None = None) -> dict:
+        """Whole-network HBM byte terms (input / weights / output /
+        total) plus the cross-device ``halo`` wire term, under the
+        plan's residency and pooling decisions.  With
+        ``residency="never"`` and ``fold_pooling=False`` the totals
+        reduce exactly to the sum of the per-layer
+        ``ConvPlan.hbm_bytes()`` (tested)."""
+        tot = dict(input=0, weights=0, output=0, halo=0, total=0)
+        for s in self.steps:
+            t = s.hbm_bytes(mode)
+            for k in tot:
+                tot[k] += t.get(k, 0)
+        return tot
+
+    def accesses(self, mode: str | None = None) -> int:
+        """Whole-network paper-metric accesses (ifmap + weight reads)."""
+        return sum(s.accesses(mode) for s in self.steps)
+
+    def ops_per_macc(self, mode: str | None = None) -> float:
+        """The paper's network-level Ops/MAcc (arXiv:2502.18983 SV):
+        total operations over total external reads."""
+        return self.ops / max(self.accesses(mode), 1)
+
+    def compare(self) -> dict:
+        """The trim-vs-3dtrim comparison this subsystem exists for:
+        per-layer and whole-network Ops/MAcc in both accounting modes
+        with the 3dtrim/trim improvement ratio."""
+        rows = []
+        for s in self.steps:
+            a3, at = s.ops_per_macc("3dtrim"), s.ops_per_macc("trim")
+            rows.append(dict(
+                layer=s.name, label=s.layer.label(), macs=s.macs,
+                g_tiles=s.plan.g_tiles, dataflow=s.plan.dataflow,
+                resident_in=s.resident_in, resident_out=s.resident_out,
+                pool=s.pool,
+                ops_per_macc_3dtrim=a3, ops_per_macc_trim=at,
+                improvement=a3 / max(at, 1e-12)))
+        n3, nt = self.ops_per_macc("3dtrim"), self.ops_per_macc("trim")
+        return dict(
+            network=self.name, residency=self.residency,
+            layers=rows, macs=self.macs, ops=self.ops,
+            ops_per_macc_3dtrim=n3, ops_per_macc_trim=nt,
+            improvement=n3 / max(nt, 1e-12))
+
+    def arch_compare(self, hw_a=None, hw_b=None) -> dict:
+        """The paper's own §V network comparison: whole-network Ops/MAcc
+        of the 3D-TrIM ASIC configuration vs the TrIM configuration,
+        using the Fig. 6 architectural access model
+        (:func:`repro.core.model.layer_accesses` — shadow registers,
+        filter passes, kernel tiling and slice counts included).  This
+        is the accounting that reproduces the claimed "up to 3.37x"
+        per-layer improvements; :meth:`compare` is the TPU execution
+        engine's strip-level image of the same tradeoff."""
+        from repro.core.model import TRIM, TRIM_3D, layer_accesses
+        hw_a = TRIM_3D if hw_a is None else hw_a
+        hw_b = TRIM if hw_b is None else hw_b
+        rows, tot = [], {hw_a.name: 0, hw_b.name: 0}
+        for s in self.steps:
+            a = layer_accesses(s.layer, hw_a)
+            b = layer_accesses(s.layer, hw_b)
+            tot[hw_a.name] += a.total
+            tot[hw_b.name] += b.total
+            rows.append(dict(
+                layer=s.name, label=s.layer.label(), ops=s.layer.ops,
+                accesses={hw_a.name: a.total, hw_b.name: b.total},
+                ops_per_macc={hw_a.name: a.ops_per_access,
+                              hw_b.name: b.ops_per_access},
+                ops_per_macc_per_slice={
+                    hw_a.name: a.ops_per_access_per_slice,
+                    hw_b.name: b.ops_per_access_per_slice},
+                improvement=a.ops_per_access_per_slice
+                / b.ops_per_access_per_slice))
+        ops = sum(s.layer.ops for s in self.steps)
+        net_a = ops / max(tot[hw_a.name], 1)
+        net_b = ops / max(tot[hw_b.name], 1)
+        return dict(
+            network=self.name, layers=rows, ops=ops, accesses=tot,
+            ops_per_macc={hw_a.name: net_a, hw_b.name: net_b},
+            ops_per_macc_per_slice={hw_a.name: net_a / hw_a.slices,
+                                    hw_b.name: net_b / hw_b.slices},
+            improvement=(net_a / hw_a.slices) / (net_b / hw_b.slices))
+
+    def as_rows(self, mode: str | None = None) -> list[dict]:
+        """Flat per-layer dict rows (the ``--json`` artifact shape)."""
+        rows = []
+        for s in self.steps:
+            t = s.hbm_bytes(mode)
+            rows.append(dict(
+                layer=s.name, label=s.layer.label(),
+                mode=mode or s.plan.traffic_mode,
+                dataflow=s.plan.dataflow, macs=s.macs,
+                hbm_input=t["input"], hbm_weights=t["weights"],
+                hbm_output=t["output"], halo=t["halo"],
+                hbm_total=t["total"],
+                accesses=s.accesses(mode),
+                ops_per_macc=s.ops_per_macc(mode),
+                resident_in=s.resident_in,
+                resident_out=s.resident_out, pool=s.pool))
+        return rows
+
+
+def _cached_knobs(layer: ConvLayer, *, n: int, dtype: str,
+                  backend: str | None, batch_shards: int,
+                  spatial_shards: int) -> dict | None:
+    """The autotune record for one topology layer, looked up under the
+    same kernel-seen key ``ops.conv2d`` uses — derived by
+    :func:`layer_kernel_problem`, the shared mapping ``tune_network``
+    writes records with (the sharded namespace when a shard grid is
+    given)."""
+    from repro.core import autotune
+    from repro.kernels.ops import MAX_NATIVE_K
+    if layer.kernel > MAX_NATIVE_K:
+        return None                      # kernel-tiled path: no cache
+    try:
+        x_shape, pad, w_shape, _ = layer_kernel_problem(layer, n=n)
+    except ValueError:
+        return None          # not executable as planned: nothing cached
+    if batch_shards > 1 or spatial_shards > 1:
+        return autotune.sharded_knobs_for(
+            x_shape, w_shape, batch_shards=batch_shards,
+            spatial_shards=spatial_shards, stride=layer.stride, pad=pad,
+            groups=layer.groups, dtype=dtype, backend=backend)
+    return autotune.knobs_for(x_shape, w_shape, stride=layer.stride,
+                              pad=pad, groups=layer.groups, dtype=dtype,
+                              backend=backend)

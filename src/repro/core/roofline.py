@@ -274,6 +274,28 @@ def sharded_conv_roofline(cell: str, plan) -> RooflineTerms:
     )
 
 
+def network_roofline(cell: str, netplan) -> RooflineTerms:
+    """Roofline terms for a whole :class:`~repro.core.netplan.NetworkPlan`
+    — the sequential-schedule sum (:func:`sum_terms`) of every layer's
+    plan terms, with the network's residency decisions applied to the
+    memory term (resident boundaries move no HBM bytes) and sharded
+    layers' halo-exchange bytes on the collective term."""
+    terms = []
+    for s in netplan.steps:
+        t = s.hbm_bytes()
+        halo = float(t["halo"])
+        terms.append(RooflineTerms(
+            cell=s.name,
+            flops_per_dev=float(s.plan.flops),
+            hbm_bytes_per_dev=float(t["total"]),
+            coll_bytes_per_dev=halo,
+            coll_by_kind={"collective-permute": halo} if halo else {},
+            peak_memory_bytes=float(s.plan.vmem_resident_bytes),
+            model_flops_per_dev=float(s.plan.flops),
+        ))
+    return sum_terms(cell, terms)
+
+
 def markdown_table(rows: list[RooflineTerms]) -> str:
     hdr = ("| cell | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | "
            "useful/HLO | roofline frac | peak GiB/dev |\n"

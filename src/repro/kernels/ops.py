@@ -353,6 +353,11 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
     sharded path consults the autotune cache under device-count
     namespaced keys (``conv2d_shard:<ndev>:``) so single- and
     multi-device tunings never alias.
+
+    Runnable quickstart snippets for every path (dataflows, packing,
+    autotune, ``mesh=``) live in README.md and are executed by CI
+    (``tools/doclint.py``); whole-topology execution is
+    ``models/layers.py cnn_apply_from_layers`` (DESIGN.md §7).
     """
     if isinstance(w, PackedConv2dWeights):
         if mesh is not None:
@@ -517,7 +522,17 @@ def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                      bias: jax.Array | None = None,
                      activation: str | None = None,
                      mesh=None, rules: dict | None = None) -> jax.Array:
-    """Depthwise 2D conv (MobileNet-style).  w: (K, K, 1, Cin * mult)."""
+    """Depthwise 2D convolution (the MobileNet scenario of the paper's
+    OPs/Access comparison).
+
+    Sugar for :func:`conv2d` with ``feature_group_count == Cin``: each
+    input channel is convolved with its own ``(K, K)`` filter(s).
+    x: (N, H, W, Cin); w: (K, K, 1, Cin * multiplier).  Everything else
+    — fused bias/activation epilogue, autotune-cache consultation, the
+    ``custom_vjp`` backward kernels, the ``mesh=`` sharded path — is
+    inherited from :func:`conv2d`; the group axis rides the kernel grid
+    so a depthwise conv is still a single ``pallas_call``.
+    """
     return conv2d(x, w, stride=stride, padding=padding, impl=impl,
                   feature_group_count=x.shape[-1], bias=bias,
                   activation=activation, mesh=mesh, rules=rules)

@@ -274,6 +274,90 @@ def simple_cnn_apply(p: dict, x: jax.Array, *, impl: str = "pallas",
     return x @ p["head"]["w"] + p["head"]["b"]
 
 
+def cnn_params_from_layers(layers_list, *, n_classes: int | None = None,
+                           bias: bool = True) -> dict:
+    """Parameter declarations for a whole conv topology (DESIGN.md §7).
+
+    ``layers_list`` is a ``list[core.model.ConvLayer]`` — e.g.
+    ``core.netplan.network_layers("vgg16")`` or a
+    ``core.netplan.scale_layers`` reduction of it.  One ``conv{i}``
+    entry per layer; ``n_classes`` adds a global-mean-pool linear head.
+    Consumed by :func:`cnn_apply_from_layers` (and packable layer-by-
+    layer with :func:`cnn_pack_params`).
+    """
+    p = {}
+    for i, l in enumerate(layers_list):
+        p[f"conv{i}"] = conv2d_params(l.kernel, l.in_channels,
+                                      l.out_channels, groups=l.groups,
+                                      bias=bias)
+    if n_classes is not None:
+        d = layers_list[-1].out_channels
+        p["head"] = {"w": Param((d, n_classes), (None, None)),
+                     "b": Param((n_classes,), (None,), init="zeros")}
+    return p
+
+
+def cnn_pack_params(p: dict, layers_list, *, n: int = 1) -> dict:
+    """Load-time packing of a whole topology's conv weights.
+
+    Threads the activation shape through the layers (pooling included)
+    so each ``conv2d_pack_params`` call keys the autotune cache with the
+    exact shape ``ops.conv2d`` will see — after an
+    ``autotune.tune_network`` sweep the packed forward pass runs
+    entirely on cached plans."""
+    from repro.core.netplan import layer_kernel_problem
+    packed = dict(p)
+    for i, l in enumerate(layers_list):
+        if l.kernel > ops.MAX_NATIVE_K:
+            continue    # kernel-tiled path re-slices raw weights (§4)
+        # the shared layer -> executed-problem mapping (validates that
+        # the layer's padding is reproducible by the execution path)
+        _, _, _, padding = layer_kernel_problem(l, n=n)
+        packed[f"conv{i}"] = conv2d_pack_params(
+            p[f"conv{i}"], groups=l.groups,
+            x_shape=(n, l.ifmap, l.ifmap, l.in_channels),
+            stride=l.stride, padding=padding)
+    return packed
+
+
+def _maxpool(x: jax.Array, stride: int, window: int) -> jax.Array:
+    """Max pooling (VGG 2x2/s2, AlexNet overlapping 3x3/s2)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
+                          activation: str | None = "relu",
+                          impl: str = "pallas", mesh=None,
+                          rules: dict | None = None) -> jax.Array:
+    """Forward pass of a conv topology built by
+    :func:`cnn_params_from_layers`: each conv runs on the trim kernel
+    path (bias + activation fused; packed params and cached plans when
+    the tree was packed/tuned), with the topology's max-pooling inferred
+    from the spatial dims between consecutive layers
+    (``core.netplan.infer_pools``).  Returns class logits when the tree
+    has a head, else the final feature map."""
+    from repro.core.netplan import infer_pools, layer_kernel_problem
+    pools = infer_pools(layers_list)
+    for i, (l, (ps, pw)) in enumerate(zip(layers_list, pools)):
+        # derive (and validate) the padding mode through the shared
+        # layer -> executed-problem mapping: a topology whose paper
+        # padding this path cannot reproduce fails loudly here instead
+        # of silently running a different network than NetworkPlan bills
+        _, _, _, padding = layer_kernel_problem(l, n=x.shape[0])
+        x = conv2d_apply(p[f"conv{i}"], x, stride=l.stride,
+                         padding=padding, groups=l.groups,
+                         activation=activation, impl=impl, mesh=mesh,
+                         rules=rules)
+        if ps > 1 or pw > 1:      # (1, w>1): stride-1 overlapping pool
+            x = _maxpool(x, ps, pw)
+    if "head" not in p:
+        return x
+    x = x.mean(axis=(1, 2))                       # global mean pool
+    return x @ p["head"]["w"] + p["head"]["b"]
+
+
 # ---------------------------------------------------------------------------
 # Dense MLPs
 # ---------------------------------------------------------------------------

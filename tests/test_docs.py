@@ -1,0 +1,42 @@
+"""The docs can't rot: the README quickstart snippets execute verbatim
+(the same check CI runs via ``tools/doclint.py``)."""
+
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import doclint  # noqa: E402
+
+
+@pytest.fixture()
+def readme_blocks():
+    path = os.path.join(ROOT, "README.md")
+    with open(path) as f:
+        blocks = doclint.extract(f.read())
+    assert blocks, "README.md lost its ```python quickstart blocks"
+    return blocks
+
+
+def test_readme_mentions_the_contract_surface(readme_blocks):
+    """The satellite checklist: the README must document the tier-1
+    command, the autotune env vars and the benchmark entry points."""
+    text = open(os.path.join(ROOT, "README.md")).read()
+    for needle in ("python -m pytest -x -q", "REPRO_CONV_AUTOTUNE",
+                   "REPRO_CONVTUNE_CACHE", "benchmarks/run.py",
+                   "benchmarks/paper_eval.py", "tools/doclint.py",
+                   "pack_conv2d_weights", "mesh"):
+        assert needle in text, f"README.md no longer mentions {needle}"
+
+
+def test_readme_snippets_execute(readme_blocks, tmp_path, monkeypatch):
+    """Run every ```python block in order in one shared namespace —
+    exactly what ``tools/doclint.py`` (and CI) does.  The snippet that
+    demonstrates REPRO_CONVTUNE_CACHE re-points the env var itself; run
+    from a temp cwd so its relative artifacts/ path stays hermetic."""
+    monkeypatch.chdir(tmp_path)
+    os.makedirs(tmp_path / "artifacts", exist_ok=True)
+    assert doclint.run_blocks(readme_blocks) == len(readme_blocks)

@@ -1,0 +1,57 @@
+"""Doc-lint: execute every fenced ``python`` code block of a markdown
+file, in order, in one shared namespace — so the README quickstart can
+build on earlier snippets exactly the way a reader would paste them.
+
+Snippets run verbatim; a failing snippet fails the lint (and CI), which
+is what keeps the docs from rotting.  Blocks fenced as ```python-skip
+are rendered like python but not executed (reserved for genuinely
+unrunnable fragments — none today).
+
+  PYTHONPATH=src python tools/doclint.py README.md
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def extract(text: str) -> list[str]:
+    """The ``python``-fenced blocks of a markdown document, in order."""
+    return [m.group(1) for m in FENCE.finditer(text)]
+
+
+def run_blocks(blocks: list[str], *, source: str = "README.md") -> int:
+    """Execute blocks in one shared namespace; returns the count run."""
+    ns: dict = {"__name__": "__doclint__"}
+    for i, block in enumerate(blocks, 1):
+        print(f"[doclint] {source} block {i}/{len(blocks)} "
+              f"({len(block.splitlines())} lines)")
+        try:
+            exec(compile(block, f"{source}#block{i}", "exec"), ns)
+        except Exception:
+            sys.stderr.write(
+                f"[doclint] FAILED in {source} block {i}:\n{block}\n")
+            raise
+    return len(blocks)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "README.md"
+    # snippets must be hermetic: pin the autotune cache to a scratch file
+    # so the lint neither reads nor pollutes a developer's real cache
+    os.environ.setdefault("REPRO_CONVTUNE_CACHE",
+                          os.path.join("artifacts", "doclint_convtune.json"))
+    with open(path) as f:
+        blocks = extract(f.read())
+    if not blocks:
+        raise SystemExit(f"[doclint] no ```python blocks in {path}")
+    n = run_blocks(blocks, source=os.path.basename(path))
+    print(f"[doclint] OK: {n} blocks executed from {path}")
+
+
+if __name__ == "__main__":
+    main()
