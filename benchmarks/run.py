@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     so a regression in either path is visible, plus the
                     tuned-tiles + packed-weights config vs the seed
                     default (derived = speedup).
+  * fused_*       — fused residency-group megakernels vs the per-layer
+                    engine (``--fused``): wall-clock on the reduced
+                    executed config + full-scale executed HBM bytes and
+                    the fused/per-layer traffic ratio (DESIGN.md §8).
   * train_*       — one jitted CNN training step on trim kernels
                     (fwd + custom_vjp bwd + AdamW) vs the pure-XLA step,
                     and the modeled fwd+bwd roofline of a conv layer
@@ -304,6 +308,54 @@ def bench_sharded(emit):
              f"dom={terms.dominant}", **tags)
 
 
+def bench_fused(emit, *, scale: int = 16, batch: int = 1):
+    """Fused residency-group megakernels (DESIGN.md §8) vs the per-layer
+    engine: wall-clock per network on the ``scale``-reduced executed
+    configuration, with the full-scale executed HBM-byte estimate (the
+    bytes the fused schedule actually moves vs one pallas_call + pool op
+    per layer) riding along as structured JSON columns."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import FusedGroupPlan, network_layers, scale_layers
+    from repro.models import layers
+    from repro.models.base import init_params
+
+    rng = np.random.default_rng(11)
+    for net in ("vgg16", "alexnet"):
+        full = network_layers(net)
+        topo = scale_layers(full, scale)
+        params = init_params(layers.cnn_params_from_layers(topo),
+                             jax.random.PRNGKey(0))
+        x = jnp.asarray(rng.standard_normal(
+            (batch, topo[0].ifmap, topo[0].ifmap, topo[0].in_channels)),
+            jnp.float32)
+        fplan = FusedGroupPlan.build(topo, n=batch)
+        fs_full = FusedGroupPlan.build(net, n=batch).summary()
+
+        per_layer = jax.jit(
+            lambda p, v, t=topo: layers.cnn_apply_from_layers(p, t, v))
+        fused = jax.jit(
+            lambda p, v, t=topo, fp=fplan: layers.cnn_apply_from_layers(
+                p, t, v, fuse_plan=fp))
+        us_p = _time(lambda: per_layer(params, x).block_until_ready())
+        us_f = _time(lambda: fused(params, x).block_until_ready())
+        match = bool(jnp.array_equal(per_layer(params, x),
+                                     fused(params, x)))
+        tags = dict(network=net, mode="fused", exec_scale=scale,
+                    executed_bytes=fs_full["executed_bytes"],
+                    per_layer_bytes=fs_full["per_layer_bytes"],
+                    executed_ratio=fs_full["executed_ratio"],
+                    groups=fs_full["groups"],
+                    max_depth=fs_full["max_depth"], bit_match=match)
+        emit(f"fused_{net}_x{scale}", us_f,
+             f"per_layer={us_p:.0f}us|"
+             f"speedup={us_p / max(us_f, 1e-9):.2f}x|"
+             f"executed_hbm={fs_full['executed_bytes'] / 1e6:.1f}MB|"
+             f"per_layer_hbm={fs_full['per_layer_bytes'] / 1e6:.1f}MB|"
+             f"ratio={fs_full['executed_ratio']:.2f}x|bit_match={match}",
+             **tags)
+
+
 def bench_roofline(emit):
     path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                         "dryrun_matrix.json")
@@ -343,6 +395,10 @@ def main() -> None:
                     help="only the sharded-conv benches: modeled halo "
                          "bytes vs measured step time on 1/2/4/8-device "
                          "meshes (forces 8 host CPU devices)")
+    ap.add_argument("--fused", action="store_true",
+                    help="only the fused-megakernel benches: fused vs "
+                         "per-layer wall-clock + full-scale executed "
+                         "HBM-byte estimate per network (DESIGN.md §8)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write rows as JSON (+ git rev) for the "
                          "perf-trajectory artifact")
@@ -367,6 +423,8 @@ def main() -> None:
 
     if args.shard:
         bench_sharded(emit)
+    elif args.fused:
+        bench_fused(emit)
     elif args.train:
         bench_train_step(emit)
     elif args.smoke:
@@ -386,6 +444,7 @@ def main() -> None:
     if args.json:
         payload = dict(rev=_git_rev(), smoke=args.smoke,
                        mode=("shard" if args.shard
+                             else "fused" if args.fused
                              else "train" if args.train
                              else "smoke" if args.smoke else "full"),
                        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),

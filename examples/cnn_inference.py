@@ -42,17 +42,21 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (NetworkPlan, autotune, compare_layer,
-                        mobilenet_layers, network_layers, scale_layers,
-                        vgg16_layers)
+from repro.core import (FusedGroupPlan, NetworkPlan, autotune,
+                        compare_layer, mobilenet_layers, network_layers,
+                        scale_layers, vgg16_layers)
 from repro.core.roofline import conv_plan_roofline, network_roofline
 from repro.models import layers
 from repro.models.base import init_params
 
 
-def run_network(net: str, scale: int, batch: int) -> None:
+def run_network(net: str, scale: int, batch: int,
+                fused: bool = False) -> None:
     """The whole-network path: tune every layer, pack every weight, run
-    the full topology, print the NetworkPlan evaluation."""
+    the full topology, print the NetworkPlan evaluation.  ``fused``
+    swaps the per-layer engine for the residency-group megakernels
+    (DESIGN.md §8): raw params (the megakernel streams weight taps
+    itself), one ``pallas_call`` per fused conv→[pool]→conv group."""
     full = network_layers(net)
     topo = scale_layers(full, scale)
     image = topo[0].ifmap
@@ -66,16 +70,36 @@ def run_network(net: str, scale: int, batch: int) -> None:
 
     params = init_params(layers.cnn_params_from_layers(topo),
                          jax.random.PRNGKey(0))
-    params = layers.cnn_pack_params(params, topo, n=batch)
+    fplan = None
+    if fused:
+        fplan = FusedGroupPlan.build(topo, n=batch)
+        groups = [f"conv{g.start}..conv{g.start + g.depth - 1}"
+                  f"(T={g.strip_rows})" if g.fused else f"conv{g.start}"
+                  for g in fplan.groups]
+        print(f"fused groups: {' | '.join(groups)}")
+    else:
+        params = layers.cnn_pack_params(params, topo, n=batch)
 
     x = jnp.asarray(np.random.default_rng(0).standard_normal(
         (batch, image, image, topo[0].in_channels)), jnp.float32)
     t0 = time.perf_counter()
-    y = layers.cnn_apply_from_layers(params, topo, x)
+    y = layers.cnn_apply_from_layers(params, topo, x, fused=fused,
+                                     fuse_plan=fplan)
     y.block_until_ready()
+    mode = "fused megakernels" if fused else "packed+tuned"
     print(f"{net} x{scale} forward (batch {batch}, {len(topo)} convs, "
-          f"packed+tuned): {y.shape}, mean {float(y.mean()):.4f}, "
+          f"{mode}): {y.shape}, mean {float(y.mean()):.4f}, "
           f"{time.perf_counter() - t0:.2f}s")
+
+    if fused:
+        # executed-traffic accounting of the same fusion at full scale
+        fs = FusedGroupPlan.build(net, n=batch).summary()
+        print(f"  executed HBM (full scale): fused "
+              f"{fs['executed_bytes']/1e6:.1f} MB vs per-layer "
+              f"{fs['per_layer_bytes']/1e6:.1f} MB -> "
+              f"{fs['executed_ratio']:.2f}x less traffic "
+              f"({fs['fused_layers']}/{len(full)} layers in depth>=2 "
+              f"groups)")
 
     # the full-scale analytical evaluation of the same topology
     plan = NetworkPlan.build(net, n=batch)
@@ -180,9 +204,17 @@ def main() -> None:
                          "executed configuration (accounting stays "
                          "full-scale)")
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--fused", action="store_true",
+                    help="execute residency groups as fused megakernels "
+                         "(conv->pool->conv chains VMEM-resident, "
+                         "DESIGN.md §8) instead of one pallas_call per "
+                         "layer; requires --net")
     args = ap.parse_args()
+    if args.fused and not args.net:
+        raise SystemExit("--fused needs --net (the reduced-head demo "
+                         "has no fusion plan)")
     if args.net:
-        run_network(args.net, args.scale, args.batch)
+        run_network(args.net, args.scale, args.batch, fused=args.fused)
     else:
         run_demo()
 

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import NetworkPlan, autotune, scale_layers, network_layers
+from repro.core import (FusedGroupPlan, NetworkPlan, autotune,
+                        scale_layers, network_layers)
 from repro.core.conv_shard import ShardedConvPlan
 from repro.core.roofline import sharded_conv_roofline
 from repro.kernels import ops
@@ -71,7 +72,14 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=16,
                     help="channel divisor for the executed --net "
                          "configuration")
+    ap.add_argument("--fused", action="store_true",
+                    help="serve --net on fused residency-group "
+                         "megakernels (DESIGN.md §8) instead of packed "
+                         "per-layer plans")
     args = ap.parse_args()
+    if args.fused and not args.net:
+        raise SystemExit("--fused needs --net (the small CNN serves the "
+                         "sharded per-layer path)")
 
     mesh = None
     if args.data * args.spatial > 1:
@@ -83,6 +91,7 @@ def main() -> None:
             raise SystemExit(f"--batch {args.batch} must divide over "
                              f"--data {args.data}")
 
+    fplan = None
     if args.net:
         topo = scale_layers(network_layers(args.net), args.scale)
         image, cin = topo[0].ifmap, topo[0].in_channels
@@ -90,7 +99,17 @@ def main() -> None:
         params = init_params(
             layers.cnn_params_from_layers(topo, n_classes=N_CLASSES),
             jax.random.PRNGKey(0))
-        params = layers.cnn_pack_params(params, topo, n=args.batch)
+        if args.fused:
+            # the megakernel streams raw weight taps itself — no packing
+            fplan = FusedGroupPlan.build(topo, n=args.batch)
+            fs = fplan.summary()
+            print(f"{args.net} fused plan @ batch {args.batch}: "
+                  f"{fs['groups']} groups (max depth {fs['max_depth']}), "
+                  f"executed {fs['executed_bytes']/1e6:.1f}MB vs "
+                  f"per-layer {fs['per_layer_bytes']/1e6:.1f}MB "
+                  f"({fs['executed_ratio']:.2f}x)")
+        else:
+            params = layers.cnn_pack_params(params, topo, n=args.batch)
         netplan = NetworkPlan.build(args.net, n=args.batch)
         t = netplan.hbm_bytes()
         print(f"{args.net} NetworkPlan @ batch {args.batch} (full scale): "
@@ -123,7 +142,9 @@ def main() -> None:
     @jax.jit
     def forward(p, x):
         if topo is not None:
-            return layers.cnn_apply_from_layers(p, topo, x)
+            return layers.cnn_apply_from_layers(p, topo, x,
+                                                fused=args.fused,
+                                                fuse_plan=fplan)
         return layers.simple_cnn_apply(p, x, mesh=mesh)
 
     rng = np.random.default_rng(0)

@@ -11,6 +11,9 @@ from repro.core.conv_shard import (  # noqa: F401
 from repro.core.netplan import (  # noqa: F401
     LayerStep, NetworkPlan, infer_pools, network_layers, scale_layers,
 )
+from repro.core.fuse_plan import (  # noqa: F401
+    FusedGroup, FusedGroupPlan, FusedStage, build_group,
+)
 from repro.core.model import (  # noqa: F401
     ConvLayer, HWConfig, TRIM, TRIM_3D,
     ifmap_reads_per_channel, ifmap_overhead_pct, fig1_curve,

@@ -545,3 +545,131 @@ def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                              dtype_bytes=dtype_bytes, backend=backend,
                              write=write, path=path)
     return {"input_grad": igrad, "weight_grad": wgrad}
+
+
+# ---------------------------------------------------------------------------
+# Fused residency groups (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def fused_key(signature: str, *, n: int = 1, dtype: str = "float32",
+              backend: str | None = None) -> str:
+    """Cache key for one fused residency group.
+
+    ``signature`` is the group's per-stage signature chain
+    (:attr:`~repro.core.fuse_plan.FusedGroup.signature` — per-stage
+    problem geometry joined with ``-``), so the namespace is
+    ``conv2d_fused:d<depth>:n<n>:<chain>:<dtype>:<backend>``.  The
+    ``conv2d_fused`` prefix guarantees a fused record can never alias a
+    per-layer ``conv2d:``, ``conv2d_wgrad:`` or ``conv2d_shard:`` key,
+    and depth + chain make distinct groups distinct even when they share
+    a leading stage.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    depth = signature.count("-") + 1 if signature else 0
+    return f"conv2d_fused:d{depth}:n{n}:{signature}:{dtype}:{backend}"
+
+
+def _valid_fused_record(rec) -> bool:
+    return (isinstance(rec, dict)
+            and isinstance(rec.get("strip_rows"), int)
+            and rec["strip_rows"] >= 1)
+
+
+def fused_knobs_for(signature: str, *, n: int = 1, dtype: str = "float32",
+                    backend: str | None = None,
+                    path: str | None = None) -> dict | None:
+    """The cached (validated) group knob for a fused-group signature, or
+    None — the lookup ``FusedGroupPlan.build(use_autotune_cache=True)``
+    performs.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
+    if os.environ.get(AUTOTUNE_ENV, "1") == "0":
+        return None
+    rec = lookup(fused_key(signature, n=n, dtype=dtype, backend=backend),
+                 path)
+    if rec is not None and _valid_fused_record(rec):
+        return rec
+    return None
+
+
+def tune_fused(layers, *, start: int = 0, pools=None, n: int = 1,
+               dtype: str = "float32", dtype_bytes: int = 4,
+               backend: str | None = None, vmem_budget: int | None = None,
+               write: bool = True, path: str | None = None) -> dict:
+    """Tune the strip height of one fused group (a layer chain) and (by
+    default) persist the winner under its ``conv2d_fused:`` key.
+
+    Candidates are the VMEM-feasible power-of-two strip heights of the
+    group; each is scored by the *grouped roofline* — the fused
+    schedule's executed bytes (overlapping stage-0 windows + per-strip
+    weight streams + pooled output) against the group's FLOPs — and the
+    minimal modeled step time wins, with total bytes then fewer strips
+    as tie-breakers.
+    """
+    from repro.core.fuse_plan import (FUSED_VMEM_BUDGET, build_group,
+                                      _strip_candidates)
+    from repro.core.roofline import conv_plan_roofline
+    if vmem_budget is None:
+        vmem_budget = FUSED_VMEM_BUDGET
+    probe = build_group(layers, start, n=n, strip_rows=1,
+                        dtype_bytes=dtype_bytes, pools=pools)
+    feasible = []
+    for t in _strip_candidates(probe.last.h_pool):
+        g = build_group(layers, start, n=n, strip_rows=t,
+                        dtype_bytes=dtype_bytes, pools=pools)
+        if g.vmem_resident_bytes <= vmem_budget:
+            feasible.append(g)
+    if not feasible:
+        raise ValueError(
+            f"no VMEM-feasible strip height for fused group "
+            f"{probe.signature} (budget {vmem_budget})")
+
+    def score(g):
+        terms = conv_plan_roofline("tune", g)
+        return (terms.step_time_s, g.hbm_bytes()["total"], g.n_strips)
+
+    best = min(feasible, key=score)
+    record = dict(strip_rows=best.strip_rows, depth=best.depth,
+                  source="model",
+                  model_step_time_s=conv_plan_roofline(
+                      "tune", best).step_time_s,
+                  hbm_total=best.hbm_bytes()["total"], measured_us=None)
+    if write:
+        store(fused_key(best.signature, n=n, dtype=dtype, backend=backend),
+              record, path)
+    return record
+
+
+def tune_fused_network(network="vgg16", *, n: int = 1,
+                       dtype: str = "float32", dtype_bytes: int = 4,
+                       backend: str | None = None,
+                       residency: str = "auto",
+                       write: bool = True, path: str | None = None) -> dict:
+    """Tune every fused residency group of a topology in one sweep.
+
+    Partitions the network with :class:`~repro.core.fuse_plan.
+    FusedGroupPlan` (model-driven, no cache) and writes one
+    ``conv2d_fused:`` record per depth>=2 group, so a subsequent
+    ``FusedGroupPlan.build(use_autotune_cache=True)`` — and therefore
+    ``cnn_apply_from_layers(..., fused=True)`` — runs on cached group
+    knobs.  Returns ``{"<first>..<last>": record}`` per fused group.
+    """
+    from repro.core.fuse_plan import FusedGroupPlan
+    from repro.core.netplan import infer_pools, network_layers
+    layers = list(network_layers(network))
+    pools = list(infer_pools(layers))
+    plan = FusedGroupPlan.build(layers, n=n, dtype_bytes=dtype_bytes,
+                                residency=residency)
+    results: dict[str, dict] = {}
+    for g in plan.groups:
+        if not g.fused:
+            continue
+        sub = layers[g.start:g.start + g.depth]
+        rec = tune_fused(sub, start=g.start,
+                         pools=pools[g.start:g.start + g.depth], n=n,
+                         dtype=dtype, dtype_bytes=dtype_bytes,
+                         backend=backend, write=write, path=path)
+        rec = dict(rec, key=fused_key(g.signature, n=n, dtype=dtype,
+                                      backend=backend))
+        results[f"{sub[0].name}..{sub[-1].name}"] = rec
+    return results

@@ -327,20 +327,15 @@ def _maxpool(x: jax.Array, stride: int, window: int) -> jax.Array:
         (1, stride, stride, 1), "VALID")
 
 
-def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
-                          activation: str | None = "relu",
-                          impl: str = "pallas", mesh=None,
-                          rules: dict | None = None) -> jax.Array:
-    """Forward pass of a conv topology built by
-    :func:`cnn_params_from_layers`: each conv runs on the trim kernel
-    path (bias + activation fused; packed params and cached plans when
-    the tree was packed/tuned), with the topology's max-pooling inferred
-    from the spatial dims between consecutive layers
-    (``core.netplan.infer_pools``).  Returns class logits when the tree
-    has a head, else the final feature map."""
-    from repro.core.netplan import infer_pools, layer_kernel_problem
-    pools = infer_pools(layers_list)
-    for i, (l, (ps, pw)) in enumerate(zip(layers_list, pools)):
+def _cnn_apply_layer_range(p: dict, layers_list, pools, x: jax.Array,
+                           lo: int, hi: int, *, activation, impl, mesh,
+                           rules) -> jax.Array:
+    """Per-layer execution of layers ``[lo, hi)`` — one ``conv2d`` call
+    (plus the inferred max-pool) per layer.  Shared by the plain forward
+    pass and by the fused path's depth-1 groups."""
+    from repro.core.netplan import layer_kernel_problem
+    for i in range(lo, hi):
+        l, (ps, pw) = layers_list[i], pools[i]
         # derive (and validate) the padding mode through the shared
         # layer -> executed-problem mapping: a topology whose paper
         # padding this path cannot reproduce fails loudly here instead
@@ -352,6 +347,71 @@ def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
                          rules=rules)
         if ps > 1 or pw > 1:      # (1, w>1): stride-1 overlapping pool
             x = _maxpool(x, ps, pw)
+    return x
+
+
+def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
+                          activation: str | None = "relu",
+                          impl: str = "pallas", mesh=None,
+                          rules: dict | None = None,
+                          fused: bool = False,
+                          fuse_plan=None) -> jax.Array:
+    """Forward pass of a conv topology built by
+    :func:`cnn_params_from_layers`: each conv runs on the trim kernel
+    path (bias + activation fused; packed params and cached plans when
+    the tree was packed/tuned), with the topology's max-pooling inferred
+    from the spatial dims between consecutive layers
+    (``core.netplan.infer_pools``).  Returns class logits when the tree
+    has a head, else the final feature map.
+
+    ``fused=True`` executes each residency group of a
+    :class:`~repro.core.fuse_plan.FusedGroupPlan` as one megakernel
+    (conv→[pool]→conv chains with interior activations VMEM-resident,
+    DESIGN.md §8) instead of one ``pallas_call`` per layer; depth-1
+    groups fall back to the per-layer path, so outputs are bit-identical
+    either way.  Pass ``fuse_plan`` to reuse a prebuilt (e.g. autotuned)
+    plan; otherwise one is built for ``x``'s batch.  The fused path
+    needs raw (unpacked) conv params and is single-device —
+    ``mesh``/``rules`` select the sharded per-layer engine instead.
+    """
+    from repro.core.netplan import infer_pools
+    pools = list(infer_pools(layers_list))
+    if fused or fuse_plan is not None:
+        if mesh is not None or rules is not None:
+            raise ValueError(
+                "fused execution is single-device; drop mesh/rules or "
+                "run the per-layer sharded path (fused=False)")
+        from repro.core.fuse_plan import FusedGroupPlan
+        from repro.kernels.trim_conv2d_fused import fused_group_apply
+        if fuse_plan is None:
+            fuse_plan = FusedGroupPlan.build(list(layers_list),
+                                             n=x.shape[0])
+        for g in fuse_plan.groups:
+            lo, hi = g.start, g.start + g.depth
+            if not g.fused:
+                x = _cnn_apply_layer_range(
+                    p, layers_list, pools, x, lo, hi,
+                    activation=activation, impl=impl, mesh=None,
+                    rules=None)
+                continue
+            weights, biases = [], []
+            for i in range(lo, hi):
+                lp = p[f"conv{i}"]
+                if "packed" in lp:
+                    raise ValueError(
+                        f"conv{i}: fused execution needs raw conv "
+                        "params ({'w', 'b'}); packed trees freeze the "
+                        "per-layer kernel layout — skip cnn_pack_params "
+                        "on the fused path")
+                weights.append(lp["w"])
+                biases.append(lp.get("b"))
+            x = fused_group_apply(x, weights, biases, group=g,
+                                  activation=activation)
+    else:
+        x = _cnn_apply_layer_range(p, layers_list, pools, x, 0,
+                                   len(layers_list),
+                                   activation=activation, impl=impl,
+                                   mesh=mesh, rules=rules)
     if "head" not in p:
         return x
     x = x.mean(axis=(1, 2))                       # global mean pool

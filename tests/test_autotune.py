@@ -401,3 +401,87 @@ def test_packed_params_pick_up_cached_plan():
     assert (pk.tile_cout, pk.tile_h, pk.dataflow) == (6, 4, "halo")
     x = jnp.asarray(RNG.standard_normal((1, 12, 12, 8)), jnp.float32)
     _allclose(ops.conv2d(x, pk), ref.conv2d(x, w))
+
+
+# ---------------------------------------------------------------------------
+# Fused-group keys (DESIGN.md §8): conv2d_fused:d<depth> namespacing
+# ---------------------------------------------------------------------------
+
+def test_fused_keys_never_alias_other_namespaces():
+    """A fused-group record lives under conv2d_fused:d<depth>:... — it
+    can never collide with the per-layer conv2d:/conv2d_wgrad:/
+    conv2d_shard: keys of its own stages, and groups that share a
+    leading stage stay distinct (depth + signature chain in the key)."""
+    from repro.core.fuse_plan import build_group
+    from repro.core.netplan import network_layers
+    layers = network_layers("alexnet")[1:]        # conv2..conv5 (K<=5)
+    g2 = build_group(layers[:2], 0)
+    g4 = build_group(layers, 0)
+    k2 = autotune.fused_key(g2.signature)
+    k4 = autotune.fused_key(g4.signature)
+    assert k2.startswith("conv2d_fused:d2:")
+    assert k4.startswith("conv2d_fused:d4:")
+    per_layer = {autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0, op=op)
+                 for op in ("conv2d", "conv2d_wgrad",
+                            autotune.sharded_key_op(1, 4))}
+    assert len({k2, k4, *per_layer}) == 2 + len(per_layer)
+    # batch and dtype are part of the problem
+    assert autotune.fused_key(g2.signature, n=4) != k2
+    assert autotune.fused_key(g2.signature, dtype="bfloat16") != k2
+    # writing a fused record never shadows the others
+    autotune.store(k2, dict(strip_rows=3, depth=2))
+    autotune.store(k4, dict(strip_rows=7, depth=4))
+    assert autotune.fused_knobs_for(g2.signature)["strip_rows"] == 3
+    assert autotune.fused_knobs_for(g4.signature)["strip_rows"] == 7
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+    # malformed fused records are rejected, not trusted
+    autotune.store(k2, dict(strip_rows="bad"))
+    assert autotune.fused_knobs_for(g2.signature) is None
+    autotune.store(k2, dict(strip_rows=0))
+    assert autotune.fused_knobs_for(g2.signature) is None
+
+
+def test_tune_fused_round_trip():
+    """tune_fused persists a VMEM-feasible strip height under the fused
+    key; FusedGroupPlan.build(use_autotune_cache=True) then runs on the
+    cached group knob (surviving the in-process memo)."""
+    from repro.core.fuse_plan import FUSED_VMEM_BUDGET, FusedGroupPlan, \
+        build_group
+    from repro.core.netplan import infer_pools, network_layers
+    layers = network_layers("alexnet")
+    pools = list(infer_pools(layers))
+    sub = layers[1:]                              # the fusable chain
+    rec = autotune.tune_fused(sub, pools=pools[1:])
+    assert rec["strip_rows"] >= 1 and rec["depth"] == len(sub)
+    assert rec["source"] == "model"
+    g = build_group(sub, 0, strip_rows=rec["strip_rows"], pools=pools[1:])
+    assert g.vmem_resident_bytes <= FUSED_VMEM_BUDGET
+    got = autotune.fused_knobs_for(g.signature)
+    assert got == rec
+    autotune.reset_memory_cache()
+    assert autotune.fused_knobs_for(g.signature) == rec
+    # the plan-level consumer: cached strip heights drive the partition
+    plan = FusedGroupPlan.build("alexnet", use_autotune_cache=True)
+    fused = [gg for gg in plan.groups if gg.fused]
+    assert fused and fused[0].strip_rows == rec["strip_rows"]
+    # REPRO_CONV_AUTOTUNE=0 disables the lookup
+    os.environ[autotune.AUTOTUNE_ENV] = "0"
+    try:
+        assert autotune.fused_knobs_for(g.signature) is None
+    finally:
+        del os.environ[autotune.AUTOTUNE_ENV]
+
+
+def test_tune_fused_network_sweep():
+    """One record per depth>=2 group of the partition, each under its
+    own conv2d_fused key."""
+    recs = autotune.tune_fused_network("vgg16")
+    assert recs, "vgg16 partition produced no fused groups"
+    from repro.core.fuse_plan import FusedGroupPlan
+    plan = FusedGroupPlan.build("vgg16")
+    assert len(recs) == sum(1 for g in plan.groups if g.fused)
+    keys = {r["key"] for r in recs.values()}
+    assert len(keys) == len(recs)
+    for r in recs.values():
+        assert r["key"].startswith("conv2d_fused:")
+        assert autotune.lookup(r["key"])["strip_rows"] == r["strip_rows"]

@@ -336,3 +336,67 @@ def test_ops_conv2d_matches_ref_on_sampled_geometries(
                      jnp.float32)
     _close(ops.conv2d(x, wt, stride=stride, padding=padding),
            ref.conv2d(x, wt, stride=stride, padding=padding))
+
+
+# ---------------------------------------------------------------------------
+# FusedGroupPlan invariants (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=18, deadline=None)
+@given(net=st.sampled_from(["vgg16", "alexnet", "mobilenet"]),
+       n=st.integers(1, 3),
+       dataflow=st.sampled_from(["carry", "halo"]),
+       residency=st.sampled_from(["auto", "always", "never"]),
+       max_depth=st.sampled_from([None, 1, 2, 4]))
+def test_fused_partition_invariants(net, n, dataflow, residency,
+                                    max_depth):
+    """The group partition tiles the network exactly; executed bytes
+    never exceed the spill-everything baseline; depth-1 partitions
+    reduce *exactly* to per-layer execution."""
+    from repro.core.fuse_plan import FusedGroupPlan
+    from repro.core.netplan import network_layers
+    layers_list = network_layers(net)
+    plan = FusedGroupPlan.build(net, n=n, dataflow=dataflow,
+                                residency=residency, max_depth=max_depth)
+
+    # exact tiling: contiguous, ordered, covering every layer once
+    assert plan.groups[0].start == 0
+    for g, nxt in zip(plan.groups, plan.groups[1:]):
+        assert nxt.start == g.start + g.depth
+    assert sum(g.depth for g in plan.groups) == len(layers_list)
+    if max_depth is not None:
+        assert all(g.depth <= max_depth for g in plan.groups)
+
+    # fused execution may only remove HBM traffic, never add it
+    executed = plan.executed_hbm_bytes()
+    assert executed["total"] <= plan.never_hbm_bytes()
+    assert executed["total"] == (executed["input"] + executed["weights"]
+                                 + executed["output"] + executed["pool"])
+    assert plan.executed_ratio() >= 1.0
+
+    # a depth-1 partition is per-layer execution, byte for byte
+    p1 = FusedGroupPlan.build(net, n=n, dataflow=dataflow,
+                              residency=residency, max_depth=1)
+    assert p1.executed_hbm_bytes()["total"] == p1.never_hbm_bytes()
+    assert p1.executed_ratio() == 1.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(net=st.sampled_from(["vgg16", "alexnet"]), n=st.integers(1, 2),
+       strip_rows=st.sampled_from([None, 1, 2, 7]))
+def test_fused_group_geometry_chains(net, n, strip_rows):
+    """Per-group strip geometry: stage i's pooled rows are exactly stage
+    i+1's input rows (the resident chain), and the last stage's strips
+    tile its pooled output."""
+    from repro.core.fuse_plan import FusedGroupPlan
+    plan = FusedGroupPlan.build(net, n=n, strip_rows=strip_rows)
+    for g in plan.groups:
+        for a, b in zip(g.stages, g.stages[1:]):
+            assert (a.pool_start, a.pool_step, a.pool_rows) == \
+                (b.in_start, b.in_step, b.in_rows)
+            assert (a.h_pool, a.w_pool, a.cout) == \
+                (b.h_in, b.w_in, b.cin)
+        lt = g.last
+        assert lt.pool_rows == g.strip_rows
+        assert g.n_strips * g.strip_rows >= lt.h_pool
+        assert (g.n_strips - 1) * g.strip_rows < lt.h_pool
