@@ -34,7 +34,11 @@ Run: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json OUT.json]
 ``--json OUT.json`` additionally writes the rows as machine-readable JSON
 (name/us/derived + optional structured columns such as dataflow/mode on
 conv and shard rows, + git rev) — the perf-trajectory artifact CI
-uploads; the row schema is documented in DESIGN.md §7.  The
+uploads; the row schema is documented in DESIGN.md §7.  Rows whose
+measurement triggered a guarded-dispatch demotion (DESIGN.md §9) carry a
+``guard`` column listing the tier falls, and the payload carries the full
+``guard_events`` ring — a bench number produced by a fallback tier is
+never mistaken for the healthy path.  The
 whole-network paper evaluation (per-layer and network Ops/MAcc, trim vs
 3dtrim) is its own entry point, ``benchmarks/paper_eval.py``.
 """
@@ -50,6 +54,10 @@ import sys
 import time
 
 import numpy as np
+
+# jax-free at module level by design (guard's docstring): importing it
+# here cannot break the --shard pre-jax XLA_FLAGS dance below
+from repro.core import guard
 
 
 def _time(fn, warmup=1, iters=3) -> float:
@@ -412,11 +420,28 @@ def main() -> None:
         force_host_device_count(8)
     print("name,us_per_call,derived")
     rows = []
+    last_guard_seq = [-1]
+
+    def _new_guard_events():
+        new = [e for e in guard.events() if e["seq"] > last_guard_seq[0]]
+        if new:
+            last_guard_seq[0] = new[-1]["seq"]
+        return new
 
     def emit(name, us, derived, **extra):
         """One bench row.  CSV stays (name, us, derived); ``extra``
         key/values (e.g. dataflow=, mode=) ride along as structured
-        columns in the --json artifact (schema: DESIGN.md §7)."""
+        columns in the --json artifact (schema: DESIGN.md §7).  Any
+        guard demotions recorded since the previous row land on this
+        row as a ``guard`` column, so a bench number silently produced
+        by a fallback tier is distinguishable from the healthy path."""
+        new = _new_guard_events()
+        if new:
+            extra.setdefault("guard", [
+                {k: e[k] for k in ("tier", "to", "kind", "layer")}
+                for e in new])
+            print(f"# guard: {name} demoted "
+                  + ";".join(f"{e['tier']}->{e['to']}" for e in new))
         print(f"{name},{us:.1f},{derived}")
         rows.append(dict(name=name, us=round(us, 1), derived=derived,
                          **extra))
@@ -448,6 +473,7 @@ def main() -> None:
                              else "train" if args.train
                              else "smoke" if args.smoke else "full"),
                        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       guard_events=guard.events(),
                        rows=rows)
         os.makedirs(os.path.dirname(os.path.abspath(args.json)),
                     exist_ok=True)

@@ -43,8 +43,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (FusedGroupPlan, NetworkPlan, autotune,
-                        compare_layer, mobilenet_layers, network_layers,
-                        scale_layers, vgg16_layers)
+                        compare_layer, guard, mobilenet_layers,
+                        network_layers, scale_layers, vgg16_layers)
 from repro.core.roofline import conv_plan_roofline, network_roofline
 from repro.models import layers
 from repro.models.base import init_params
@@ -193,6 +193,21 @@ def run_demo() -> None:
               f"VMEM {plan.vmem_resident_bytes/2**20:.1f} MiB")
 
 
+def report_degraded() -> None:
+    """Print the guarded-dispatch demotion report (DESIGN.md §9): which
+    tiers fell, to where, and why.  Silence means every conv ran on its
+    intended tier — a degraded run is never mistaken for a healthy one."""
+    evts = guard.events()
+    if not evts:
+        return
+    print(f"\nDEGRADED MODE: {len(evts)} conv tier demotion(s) "
+          f"(results remain correct via fallback):")
+    for e in evts:
+        where = f" [{e['layer']}]" if e.get("layer") else ""
+        print(f"  {e['tier']} -> {e['to']}{where} ({e['kind']}): "
+              f"{e['error'][:100]}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default=None,
@@ -217,6 +232,7 @@ def main() -> None:
         run_network(args.net, args.scale, args.batch, fused=args.fused)
     else:
         run_demo()
+    report_degraded()
 
 
 if __name__ == "__main__":

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FusedGroupPlan, NetworkPlan, autotune,
+from repro.core import (FusedGroupPlan, NetworkPlan, autotune, guard,
                         scale_layers, network_layers)
 from repro.core.conv_shard import ShardedConvPlan
 from repro.core.roofline import sharded_conv_roofline
@@ -176,6 +176,14 @@ def main() -> None:
     print(f"served {served} images in {dt:.2f}s "
           f"({served / dt:.1f} img/s) on {mesh_desc}; "
           f"class histogram {np.bincount(preds, minlength=N_CLASSES)}")
+
+    # degraded-mode report (DESIGN.md §9): silence means every conv ran
+    # on its intended tier; a served batch that survived on a fallback
+    # tier is labeled, never silent
+    for e in guard.events():
+        where = f" [{e['layer']}]" if e.get("layer") else ""
+        print(f"DEGRADED: {e['tier']} -> {e['to']}{where} "
+              f"({e['kind']}): {e['error'][:100]}")
 
 
 if __name__ == "__main__":

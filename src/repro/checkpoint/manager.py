@@ -11,16 +11,46 @@ restore they are ``device_put`` against the *current* mesh's shardings, so
 a job can come back on a different mesh shape (tested in
 tests/test_checkpoint.py).  The multi-host production path (shard-per-host
 files + index) keeps the same manifest contract.
+
+Integrity (DESIGN.md §9): ``save`` writes a ``sha256.json`` sidecar
+(digest per payload file) inside the temp dir before the atomic publish;
+``restore`` verifies the digests *before* deserializing and raises
+:class:`CheckpointCorruptError` on any mismatch — a bit-flip or
+truncation surfaces as a diagnosable integrity error, not a zipfile
+traceback.  ``restore(..., verify=False)`` is the escape hatch for
+salvaging a damaged checkpoint; checkpoints from before the sidecar
+existed restore with a warning.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
+import warnings
 
 import jax
 import numpy as np
+
+#: files whose digests the sha256 sidecar covers
+_PAYLOAD_FILES = ("arrays.npz", "manifest.json")
+
+# patchable alias: the fault harness (repro.testing.faults) swaps this
+# to simulate a crash after the temp write but before the publish
+_publish = os.rename
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint payload does not match its sha256 sidecar."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten(tree, prefix=""):
@@ -68,9 +98,15 @@ class CheckpointManager:
         manifest.update(meta or {})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1, default=str)
+        # integrity sidecar, written before the publish so a published
+        # step always carries its digests
+        digests = {name: _sha256(os.path.join(tmp, name))
+                   for name in _PAYLOAD_FILES}
+        with open(os.path.join(tmp, "sha256.json"), "w") as f:
+            json.dump(digests, f, indent=1)
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)                       # atomic publish
+        _publish(tmp, final)                        # atomic publish
         self._gc()
 
     def _gc(self):
@@ -93,16 +129,51 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify_step(self, step: int) -> None:
+        """Check the step's payload files against the sha256 sidecar.
+
+        Raises :class:`CheckpointCorruptError` on any mismatch or
+        missing payload.  Checkpoints written before the sidecar existed
+        (no ``sha256.json``) warn and pass unverified.
+        """
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        sidecar = os.path.join(path, "sha256.json")
+        if not os.path.exists(sidecar):
+            warnings.warn(
+                f"checkpoint step {step} predates integrity sidecars "
+                "(no sha256.json) — restoring unverified", RuntimeWarning,
+                stacklevel=2)
+            return
+        with open(sidecar) as f:
+            digests = json.load(f)
+        for name, want in digests.items():
+            fpath = os.path.join(path, name)
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: payload {name} missing")
+            got = _sha256(fpath)
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: {name} sha256 mismatch "
+                    f"(stored {want[:12]}…, actual {got[:12]}…) — the "
+                    "file is corrupt (bit-flip/truncation); restore an "
+                    "older step or pass verify=False to salvage")
+
     def restore(self, state_template, step: int | None = None,
-                shardings=None):
+                shardings=None, *, verify: bool = True):
         """Rebuild ``state_template``'s structure with stored arrays.
 
         ``shardings``: optional matching tree of NamedShardings for the
-        *current* mesh (elastic restart).
+        *current* mesh (elastic restart).  ``verify=True`` (default)
+        checks the sha256 sidecar *before* deserializing and raises
+        :class:`CheckpointCorruptError` on corruption; ``verify=False``
+        skips the check (salvage escape hatch).
         """
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None
+        if verify:
+            self.verify_step(step)
         path = os.path.join(self.dir, f"step_{step:08d}")
         data = np.load(os.path.join(path, "arrays.npz"))
         with open(os.path.join(path, "manifest.json")) as f:

@@ -26,17 +26,35 @@ Keys are ``conv2d:n..h..w..cin..cout..k..s..p..g..:<dtype>:<backend>`` —
 one entry per (shape, stride, pad, groups, dtype, backend) problem, so a
 cache tuned on TPU never feeds knobs to an interpret-mode CPU run and
 vice versa.
+
+Robustness (DESIGN.md §9): ``store`` takes a ``.lock`` sidecar file
+lock and re-reads + merges the on-disk entries before the atomic
+``os.replace``, so concurrent processes sharing a cache path (e.g. CI
+jobs) never drop each other's records.  An unreadable or
+wrong-schema-version cache file is *quarantined* — renamed to
+``convtune.json.corrupt-<pid>`` with a warning — never silently reset,
+so a corruption event stays diagnosable.  Consult-site lookups validate
+each record structurally AND against the current plan geometry
+(``ConvPlan.build`` with the record's knobs); a malformed record is a
+miss, warned once per (path, key).
 """
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
+import warnings
 
 from repro.core.conv_plan import ConvPlan, input_grad_geometry
 from repro.core.roofline import conv_plan_roofline
 from repro.core.tiling import VMEM_BYTES
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: cooperative locking unavailable
+    fcntl = None
 
 DATAFLOWS = ("carry", "halo")
 CACHE_ENV = "REPRO_CONVTUNE_CACHE"
@@ -46,6 +64,14 @@ _SCHEMA_VERSION = 1
 # path -> entries dict; "missing file" memoized as {} so the hot-path
 # lookup in ops.conv2d costs one dict probe, not a stat per call.
 _MEM: dict[str, dict] = {}
+
+# (path, key) pairs already warned about — one warning per bad record,
+# not one per conv call.
+_WARNED: set = set()
+
+# patchable alias: the fault harness (repro.testing.faults) swaps this
+# to simulate a crash after the temp write but before the publish
+_publish = os.replace
 
 
 # ---------------------------------------------------------------------------
@@ -67,17 +93,75 @@ def cache_path(path: str | None = None) -> str:
 def reset_memory_cache() -> None:
     """Drop the in-process cache memo (tests / after external writes)."""
     _MEM.clear()
+    _WARNED.clear()
+
+
+def _quarantine(path: str, reason: str) -> None:
+    """Move an unusable cache file aside (never silently discard it)."""
+    dest = f"{path}.corrupt-{os.getpid()}"
+    try:
+        os.replace(path, dest)
+    except OSError:
+        dest = "<unmovable>"
+    warnings.warn(
+        f"autotune cache {path} is unusable ({reason}); quarantined to "
+        f"{dest} and starting a fresh cache", RuntimeWarning,
+        stacklevel=3)
+
+
+def _read_disk(path: str) -> dict:
+    """Fresh (un-memoized) read of the on-disk entries.
+
+    A missing file is an empty cache.  Corrupt JSON, a non-dict
+    document, or an empty file is quarantined.  A ``version`` other than
+    ours is also quarantined: version 1 is the first schema, so there is
+    nothing to migrate from — a future reader that understands newer
+    versions should migrate here instead; until then the file is
+    preserved under its ``.corrupt-<pid>`` name for inspection rather
+    than silently dropped.
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        _quarantine(path, f"unreadable: {type(e).__name__}: {e}")
+        return {}
+    if not isinstance(data, dict) or not isinstance(
+            data.get("entries", {}), dict):
+        _quarantine(path, "not a cache document")
+        return {}
+    version = data.get("version")
+    if version != _SCHEMA_VERSION:
+        _quarantine(path, f"schema version {version!r} != "
+                          f"{_SCHEMA_VERSION} (no migration path)")
+        return {}
+    return dict(data["entries"]) if "entries" in data else {}
 
 
 def _entries(path: str) -> dict:
     if path not in _MEM:
-        try:
-            with open(path) as f:
-                data = json.load(f)
-            _MEM[path] = dict(data.get("entries", {}))
-        except (OSError, ValueError):
-            _MEM[path] = {}
+        _MEM[path] = _read_disk(path)
     return _MEM[path]
+
+
+@contextlib.contextmanager
+def _locked(path: str):
+    """Hold the cache's ``.lock`` sidecar (blocking flock) — serializes
+    the read-merge-replace in :func:`store` across processes.  The
+    sidecar (not the cache file itself) carries the lock so the atomic
+    ``os.replace`` of the data file never invalidates a held fd."""
+    if fcntl is None:
+        yield
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path + ".lock", "w") as lk:
+        fcntl.flock(lk, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lk, fcntl.LOCK_UN)
 
 
 def lookup(key: str, path: str | None = None) -> dict | None:
@@ -86,16 +170,30 @@ def lookup(key: str, path: str | None = None) -> dict | None:
 
 
 def store(key: str, record: dict, path: str | None = None) -> str:
-    """Insert/overwrite one record and persist the cache atomically."""
+    """Insert/overwrite one record and persist the cache atomically.
+
+    Under the ``.lock`` sidecar: re-read the on-disk entries and merge
+    them over the in-memory memo (disk wins per key — last writer wins,
+    no lost updates), apply this record, write a temp file, and publish
+    with an atomic rename."""
     path = cache_path(path)
-    entries = _entries(path)
-    entries[key] = dict(record)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": _SCHEMA_VERSION, "entries": entries}, f,
-                  indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    with _locked(path):
+        merged = {**_MEM.get(path, {}), **_read_disk(path)}
+        merged[key] = dict(record)
+        _MEM[path] = merged
+        tmp = f"{path}.tmp-{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": _SCHEMA_VERSION, "entries": merged}, f,
+                      indent=1, sort_keys=True)
+        try:
+            _publish(tmp, path)
+        except BaseException:
+            # a simulated (or real) crash-before-publish must not leave
+            # the temp file looking like a cache
+            with contextlib.suppress(OSError):
+                os.remove(tmp)
+            raise
     return path
 
 
@@ -131,21 +229,56 @@ def _valid_record(rec, stride: int) -> bool:
             and rec["tile_cout"] >= 1)
 
 
+def _reject(key: str, reason: str, path: str | None) -> None:
+    """Treat a bad record as a miss; warn once per (path, key) so a
+    hand-edited/truncated record is visible without flooding the hot
+    path (one conv may be called millions of times)."""
+    tag = (cache_path(path), key)
+    if tag in _WARNED:
+        return
+    _WARNED.add(tag)
+    warnings.warn(
+        f"ignoring malformed autotune record {key!r}: {reason} "
+        "(treated as a cache miss; delete or re-tune the entry)",
+        RuntimeWarning, stacklevel=3)
+
+
 def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
               groups: int = 1, dtype: str = "float32",
               backend: str | None = None,
               path: str | None = None) -> dict | None:
     """The cached (validated) knobs for a problem, or None — the lookup
     ``ops.conv2d`` performs by default.  Honors ``REPRO_CONV_AUTOTUNE=0``.
+
+    Validation is structural (required keys/types/knob invariants) AND
+    geometric: the record's knobs must build a :class:`ConvPlan` for the
+    *current* problem.  Either failure is a miss + one warning — a
+    truncated or hand-edited record degrades to the default plan instead
+    of raising ``KeyError`` inside the dispatch path.
     """
     if os.environ.get(AUTOTUNE_ENV, "1") == "0":
         return None
-    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
-                          groups=groups, dtype=dtype, backend=backend),
-                 path)
-    if rec is not None and _valid_record(rec, stride):
-        return rec
-    return None
+    key = make_key(x_shape, w_shape, stride=stride, pad=pad,
+                   groups=groups, dtype=dtype, backend=backend)
+    rec = lookup(key, path)
+    if rec is None:
+        return None
+    if not _valid_record(rec, stride):
+        _reject(key, f"bad shape/type/knobs: {rec!r}", path)
+        return None
+    try:        # knob sanity against the current plan geometry
+        plan = ConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
+                              groups=groups, tile_h=rec["tile_h"],
+                              tile_cout=rec["tile_cout"],
+                              dataflow=rec["dataflow"])
+        if plan.vmem_resident_bytes > VMEM_BYTES:
+            raise ValueError(
+                f"resident {plan.vmem_resident_bytes} > VMEM "
+                f"{VMEM_BYTES} (the tuner only writes feasible plans)")
+    except ValueError as e:
+        _reject(key, f"knobs infeasible for current geometry: {e}", path)
+        return None
+    return rec
 
 
 def _valid_wgrad_record(rec) -> bool:
@@ -165,12 +298,28 @@ def weight_grad_knobs_for(x_shape, w_shape, *, stride: int = 1,
     performs by default.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
     if os.environ.get(AUTOTUNE_ENV, "1") == "0":
         return None
-    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
-                          groups=groups, dtype=dtype, backend=backend,
-                          op="conv2d_wgrad"), path)
-    if rec is not None and _valid_wgrad_record(rec):
-        return rec
-    return None
+    key = make_key(x_shape, w_shape, stride=stride, pad=pad,
+                   groups=groups, dtype=dtype, backend=backend,
+                   op="conv2d_wgrad")
+    rec = lookup(key, path)
+    if rec is None:
+        return None
+    if not _valid_wgrad_record(rec):
+        _reject(key, f"bad shape/type/knobs: {rec!r}", path)
+        return None
+    try:
+        plan = ConvPlan.build_weight_grad(x_shape, w_shape, stride=stride,
+                                          pad=pad, groups=groups,
+                                          tile_go=rec["tile_go"],
+                                          tile_cout=rec["tile_cout"])
+        if plan.vmem_resident_bytes > VMEM_BYTES:
+            raise ValueError(
+                f"resident {plan.vmem_resident_bytes} > VMEM "
+                f"{VMEM_BYTES} (the tuner only writes feasible plans)")
+    except ValueError as e:
+        _reject(key, f"knobs infeasible for current geometry: {e}", path)
+        return None
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -386,13 +535,30 @@ def sharded_knobs_for(x_shape, w_shape, *, batch_shards: int = 1,
     :func:`sharded_key_op`.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
     if os.environ.get(AUTOTUNE_ENV, "1") == "0":
         return None
-    rec = lookup(make_key(x_shape, w_shape, stride=stride, pad=pad,
-                          groups=groups, dtype=dtype, backend=backend,
-                          op=sharded_key_op(batch_shards, spatial_shards)),
-                 path)
-    if rec is not None and _valid_record(rec, stride):
-        return rec
-    return None
+    key = make_key(x_shape, w_shape, stride=stride, pad=pad,
+                   groups=groups, dtype=dtype, backend=backend,
+                   op=sharded_key_op(batch_shards, spatial_shards))
+    rec = lookup(key, path)
+    if rec is None:
+        return None
+    if not _valid_record(rec, stride):
+        _reject(key, f"bad shape/type/knobs: {rec!r}", path)
+        return None
+    try:
+        from repro.core.conv_shard import ShardedConvPlan
+        plan = ShardedConvPlan.build(
+            x_shape, w_shape, stride=stride, pad=pad, groups=groups,
+            tile_h=rec["tile_h"], tile_cout=rec["tile_cout"],
+            dataflow=rec["dataflow"], batch_shards=batch_shards,
+            spatial_shards=spatial_shards)
+        if plan.local_plan().vmem_resident_bytes > VMEM_BYTES:
+            raise ValueError(
+                "per-shard resident bytes exceed VMEM "
+                "(the tuner only writes feasible plans)")
+    except ValueError as e:
+        _reject(key, f"knobs infeasible for current geometry: {e}", path)
+        return None
+    return rec
 
 
 def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
@@ -585,11 +751,14 @@ def fused_knobs_for(signature: str, *, n: int = 1, dtype: str = "float32",
     performs.  Honors ``REPRO_CONV_AUTOTUNE=0``."""
     if os.environ.get(AUTOTUNE_ENV, "1") == "0":
         return None
-    rec = lookup(fused_key(signature, n=n, dtype=dtype, backend=backend),
-                 path)
-    if rec is not None and _valid_fused_record(rec):
-        return rec
-    return None
+    key = fused_key(signature, n=n, dtype=dtype, backend=backend)
+    rec = lookup(key, path)
+    if rec is None:
+        return None
+    if not _valid_fused_record(rec):
+        _reject(key, f"bad shape/type/knobs: {rec!r}", path)
+        return None
+    return rec
 
 
 def tune_fused(layers, *, start: int = 0, pools=None, n: int = 1,

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 
 import typing
 
-from repro.core import autotune
+from repro.core import autotune, guard
 from repro.core.conv_plan import ConvPlan, input_grad_geometry
 from repro.core.conv_shard import ShardedConvPlan, resolve_conv_mesh
 from repro.core.tiling import subkernel_decomposition
@@ -329,7 +329,8 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
            tile_h: int | None = None, tile_cout: int | None = None,
            dataflow: str | None = None,
            use_autotune_cache: bool = True,
-           mesh=None, rules: dict | None = None) -> jax.Array:
+           mesh=None, rules: dict | None = None,
+           layer: str | None = None) -> jax.Array:
     """(Grouped) 2D convolution with optional fused bias + activation.
 
     x: (N, H, W, Cin); w: (K, K, Cin/groups, Cout) or a
@@ -354,11 +355,31 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
     namespaced keys (``conv2d_shard:<ndev>:``) so single- and
     multi-device tunings never alias.
 
+    Execution is *guarded* (DESIGN.md §9): the tier chain
+    ``sharded -> pallas -> ref`` fails soft — a lowering/compile/runtime
+    error in a fast tier demotes the call to the next tier, records a
+    structured event (``core.guard.events()``), and memoizes the broken
+    ``(problem, tier)`` pair so it is never re-attempted.  The final
+    ``ref`` tier runs unguarded, so a genuinely invalid problem still
+    raises.  ``REPRO_CONV_GUARD=1`` additionally finite-checks tier
+    outputs (eager only) and demotes on NaN/Inf; ``layer`` names the
+    producing layer in those events.
+
     Runnable quickstart snippets for every path (dataflows, packing,
-    autotune, ``mesh=``) live in README.md and are executed by CI
+    autotune, ``mesh=``, guard) live in README.md and are executed by CI
     (``tools/doclint.py``); whole-topology execution is
     ``models/layers.py cnn_apply_from_layers`` (DESIGN.md §7).
     """
+    # invalid *arguments* are rejected here, before the guarded chain:
+    # they are caller errors, not tier faults, and must raise the same
+    # actionable ValueError from every tier (the ref oracle would
+    # otherwise surface them as KeyErrors after a pointless demotion)
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}; "
+                         f"choose from {sorted(ACTIVATIONS, key=str)}")
+    if dataflow is not None and dataflow not in autotune.DATAFLOWS:
+        raise ValueError(f"unknown dataflow {dataflow!r}; "
+                         f"choose from {autotune.DATAFLOWS}")
     if isinstance(w, PackedConv2dWeights):
         if mesh is not None:
             raise ValueError(
@@ -367,20 +388,61 @@ def conv2d(x: jax.Array, w, *, stride: int = 1,
         return _conv2d_packed(x, w, stride=stride, padding=padding,
                               impl=impl, bias=bias, activation=activation,
                               tile_h=tile_h, dataflow=dataflow,
-                              use_autotune_cache=use_autotune_cache)
+                              use_autotune_cache=use_autotune_cache,
+                              layer=layer)
+    cin, (cin_pg, cout) = x.shape[3], w.shape[2:]
+    if cin_pg * feature_group_count != cin:
+        raise ValueError(
+            f"weights expect cin/groups={cin_pg} with "
+            f"groups={feature_group_count}, input has cin={cin}")
+    if cout % feature_group_count:
+        raise ValueError(f"groups={feature_group_count} must divide "
+                         f"cout={cout}")
     if impl == "ref":
         # the oracle computes the same global math regardless of mesh
         return ref.conv2d(x, w, stride=stride, padding=padding,
                           feature_group_count=feature_group_count,
                           bias=bias, activation=activation)
+
+    def _pallas_tier():
+        return _conv2d_pallas(x, w, stride=stride, padding=padding,
+                              feature_group_count=feature_group_count,
+                              bias=bias, activation=activation,
+                              tile_h=tile_h, tile_cout=tile_cout,
+                              dataflow=dataflow,
+                              use_autotune_cache=use_autotune_cache)
+
+    def _ref_tier():
+        return ref.conv2d(x, w, stride=stride, padding=padding,
+                          feature_group_count=feature_group_count,
+                          bias=bias, activation=activation)
+
+    tiers = [("pallas", _pallas_tier), ("ref", _ref_tier)]
     if mesh is not None:
-        return _conv2d_sharded(x, w, stride=stride, padding=padding,
-                               feature_group_count=feature_group_count,
-                               bias=bias, activation=activation,
-                               tile_h=tile_h, tile_cout=tile_cout,
-                               dataflow=dataflow,
-                               use_autotune_cache=use_autotune_cache,
-                               mesh=mesh, rules=rules)
+        def _sharded_tier():
+            return _conv2d_sharded(x, w, stride=stride, padding=padding,
+                                   feature_group_count=feature_group_count,
+                                   bias=bias, activation=activation,
+                                   tile_h=tile_h, tile_cout=tile_cout,
+                                   dataflow=dataflow,
+                                   use_autotune_cache=use_autotune_cache,
+                                   mesh=mesh, rules=rules)
+        tiers.insert(0, ("sharded", _sharded_tier))
+    key = guard.problem_key("conv2d", x.shape, w.shape, stride=stride,
+                            padding=padding, groups=feature_group_count,
+                            dtype=str(x.dtype))
+    return guard.run_chain(key, tiers, layer=layer)
+
+
+def _conv2d_pallas(x: jax.Array, w: jax.Array, *, stride: int,
+                   padding: str, feature_group_count: int,
+                   bias: jax.Array | None, activation: str | None,
+                   tile_h: int | None, tile_cout: int | None,
+                   dataflow: str | None,
+                   use_autotune_cache: bool) -> jax.Array:
+    """The single-device Pallas tier: 'same' pre-pad, autotune-cache
+    knob fill, differentiable kernel core — or the K > MAX_NATIVE_K
+    adder-tree decomposition."""
     k = w.shape[0]
     if padding == "same":
         ph, pw = _same_pads(x.shape[1], k, stride), \
@@ -483,14 +545,52 @@ def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
                    stride: int, padding: str, impl: str,
                    bias: jax.Array | None, activation: str | None,
                    tile_h: int | None, dataflow: str | None,
-                   use_autotune_cache: bool) -> jax.Array:
-    """The pre-packed fast path: no per-call weight pad/reshape."""
+                   use_autotune_cache: bool,
+                   layer: str | None = None) -> jax.Array:
+    """The pre-packed fast path: no per-call weight pad/reshape.
+
+    Guarded like :func:`conv2d`: the ``ref`` fallback unpacks the padded
+    layout back to logical ``(K, K, Cin/g, Cout)`` weights + ``(Cout,)``
+    bias, so demotion preserves the packed API."""
     if bias is not None:
         raise ValueError("bias is packed inside PackedConv2dWeights; "
                          "pass it to pack_conv2d_weights instead")
     if impl != "pallas":
         raise ValueError(f"packed weights require impl='pallas', "
                          f"got {impl!r}")
+    k = pk.w.shape[0]
+
+    def _pallas_tier():
+        return _conv2d_packed_pallas(
+            x, pk, stride=stride, padding=padding, activation=activation,
+            tile_h=tile_h, dataflow=dataflow,
+            use_autotune_cache=use_autotune_cache)
+
+    def _ref_tier():
+        w_logical = _unpack_weights(pk.w, pk.groups, pk.cout)
+        b_logical = None
+        if pk.bias is not None:
+            cpp = pk.w.shape[3] // pk.groups
+            cout_pg = pk.cout // pk.groups
+            b_logical = pk.bias.reshape(pk.groups, cpp)[:, :cout_pg] \
+                .reshape(pk.cout)
+        return ref.conv2d(x, w_logical, stride=stride, padding=padding,
+                          feature_group_count=pk.groups, bias=b_logical,
+                          activation=activation)
+
+    key = guard.problem_key("conv2d_packed", x.shape,
+                            (k, pk.w.shape[1], pk.w.shape[2], pk.cout),
+                            stride=stride, padding=padding,
+                            groups=pk.groups, dtype=str(x.dtype))
+    return guard.run_chain(key, [("pallas", _pallas_tier),
+                                 ("ref", _ref_tier)], layer=layer)
+
+
+def _conv2d_packed_pallas(x: jax.Array, pk: PackedConv2dWeights, *,
+                          stride: int, padding: str,
+                          activation: str | None, tile_h: int | None,
+                          dataflow: str | None,
+                          use_autotune_cache: bool) -> jax.Array:
     k = pk.w.shape[0]
     if padding == "same":
         ph, pw = _same_pads(x.shape[1], k, stride), \
@@ -521,7 +621,8 @@ def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                      padding: str = "same", impl: str = "pallas",
                      bias: jax.Array | None = None,
                      activation: str | None = None,
-                     mesh=None, rules: dict | None = None) -> jax.Array:
+                     mesh=None, rules: dict | None = None,
+                     layer: str | None = None) -> jax.Array:
     """Depthwise 2D convolution (the MobileNet scenario of the paper's
     OPs/Access comparison).
 
@@ -535,7 +636,8 @@ def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     """
     return conv2d(x, w, stride=stride, padding=padding, impl=impl,
                   feature_group_count=x.shape[-1], bias=bias,
-                  activation=activation, mesh=mesh, rules=rules)
+                  activation=activation, mesh=mesh, rules=rules,
+                  layer=layer)
 
 
 def depthwise_conv1d(x: jax.Array, w: jax.Array, *,

@@ -12,6 +12,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import guard
 from repro.kernels import ops
 from repro.models.base import Param, shard_activation
 from repro.models.config import ModelConfig
@@ -161,21 +162,24 @@ def conv2d_apply(p: dict, x: jax.Array, *, stride: int = 1,
                  padding: str = "same", groups: int = 1,
                  activation: str | None = "relu",
                  impl: str = "pallas",
-                 mesh=None, rules: dict | None = None) -> jax.Array:
+                 mesh=None, rules: dict | None = None,
+                 layer: str | None = None) -> jax.Array:
     """One conv layer with the bias + activation epilogue fused into the
     Pallas kernel (single HBM round-trip for the output).  Accepts either
     raw params (``{"w", "b"}``) or a tree packed by
     :func:`conv2d_pack_params` (``{"packed"}``) — the packed form skips
     the per-call weight pad/reshape.  ``mesh``/``rules`` select the
     sharded halo-exchange path (DESIGN.md §6; raw params only — packed
-    weights freeze a single-device layout)."""
+    weights freeze a single-device layout).  ``layer`` names this layer
+    in guard demotion events (DESIGN.md §9)."""
     if "packed" in p:
         return ops.conv2d(x, p["packed"], stride=stride, padding=padding,
                           impl=impl, activation=activation,
-                          mesh=mesh, rules=rules)
+                          mesh=mesh, rules=rules, layer=layer)
     return ops.conv2d(x, p["w"], stride=stride, padding=padding, impl=impl,
                       feature_group_count=groups, bias=p.get("b"),
-                      activation=activation, mesh=mesh, rules=rules)
+                      activation=activation, mesh=mesh, rules=rules,
+                      layer=layer)
 
 
 def conv2d_pack_params(p: dict, *, groups: int = 1,
@@ -344,7 +348,7 @@ def _cnn_apply_layer_range(p: dict, layers_list, pools, x: jax.Array,
         x = conv2d_apply(p[f"conv{i}"], x, stride=l.stride,
                          padding=padding, groups=l.groups,
                          activation=activation, impl=impl, mesh=mesh,
-                         rules=rules)
+                         rules=rules, layer=l.name)
         if ps > 1 or pw > 1:      # (1, w>1): stride-1 overlapping pool
             x = _maxpool(x, ps, pw)
     return x
@@ -405,8 +409,25 @@ def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
                         "on the fused path")
                 weights.append(lp["w"])
                 biases.append(lp.get("b"))
-            x = fused_group_apply(x, weights, biases, group=g,
-                                  activation=activation)
+            # guarded megakernel (DESIGN.md §9): a lowering/runtime
+            # failure of the whole-group kernel demotes this group to
+            # per-layer execution, which itself demotes conv-by-conv
+            label = f"{layers_list[lo].name}..{layers_list[hi - 1].name}"
+
+            def _fused_tier(x=x, weights=weights, biases=biases, g=g):
+                return fused_group_apply(x, weights, biases, group=g,
+                                         activation=activation)
+
+            def _per_layer_tier(x=x, lo=lo, hi=hi):
+                return _cnn_apply_layer_range(
+                    p, layers_list, pools, x, lo, hi,
+                    activation=activation, impl=impl, mesh=None,
+                    rules=None)
+
+            key = f"fused:d{g.depth}:n{g.n}:{g.signature}:{x.dtype}"
+            x = guard.run_chain(key, [("fused", _fused_tier),
+                                      ("pallas", _per_layer_tier)],
+                                layer=label)
     else:
         x = _cnn_apply_layer_range(p, layers_list, pools, x, 0,
                                    len(layers_list),

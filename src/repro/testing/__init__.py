@@ -1,0 +1,6 @@
+"""Test-support utilities: the fault-injection harness (DESIGN.md §9).
+
+Import the harness as ``from repro.testing import faults`` — the package
+itself stays empty so ``python -m repro.testing.faults`` (the CI
+guard-event demo) does not double-import the module.
+"""

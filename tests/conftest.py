@@ -56,6 +56,17 @@ def _isolated_convtune_cache(tmp_path, monkeypatch):
     yield
     autotune.reset_memory_cache()
 
+
+@pytest.fixture(autouse=True)
+def _guard_reset():
+    """Fresh guard state (events + memoized demotions) per test: a
+    demotion memoized by one test must never silently reroute another
+    test's conv dispatch."""
+    from repro.core import guard
+    guard.reset()
+    yield
+    guard.reset()
+
 try:                                    # pragma: no cover - env-dependent
     import hypothesis  # noqa: F401
 except ImportError:

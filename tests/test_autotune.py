@@ -81,6 +81,131 @@ def test_knobs_for_validates_records_and_env_kill_switch(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# Robustness (DESIGN.md §9): concurrent stores, quarantine, validation
+# ---------------------------------------------------------------------------
+
+_STRESS_WORKER = r"""
+import sys
+from repro.core import autotune
+path, wid, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+for i in range(n):
+    autotune.store(f"conv2d:w{wid}:e{i}",
+                   dict(tile_h=4, tile_cout=8, dataflow="carry",
+                        worker=wid, i=i), path)
+print("done", wid)
+"""
+
+
+def test_concurrent_store_loses_no_entries(tmp_path):
+    """ISSUE 7 acceptance: N>=4 processes hammering one cache path
+    concurrently retain 100% of their entries — the .lock sidecar +
+    read-merge-replace store closes the lost-update race."""
+    import subprocess
+    import sys
+    n_proc, n_entries = 4, 30
+    path = str(tmp_path / "convtune.json")
+    env = dict(os.environ, PYTHONPATH="src")
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _STRESS_WORKER, path, str(w),
+         str(n_entries)],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for w in range(n_proc)]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err
+    autotune.reset_memory_cache()
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    want = {f"conv2d:w{w}:e{i}" for w in range(n_proc)
+            for i in range(n_entries)}
+    missing = want - set(entries)
+    assert not missing, f"lost {len(missing)}/{len(want)}: " \
+                        f"{sorted(missing)[:5]}..."
+    # and each record survived byte-for-byte (merge never mangles)
+    assert entries["conv2d:w0:e0"]["worker"] == 0
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "wrong_version",
+                                  "empty"])
+def test_corrupt_cache_is_quarantined_not_reset(tmp_path, mode):
+    """An unreadable (or unknown-schema) cache is renamed to
+    convtune.json.corrupt-<pid> with a warning — preserved for
+    inspection, never silently discarded — and reads as empty."""
+    from repro.testing import faults
+    path = str(tmp_path / "convtune.json")
+    autotune.store("conv2d:x", dict(tile_h=4, tile_cout=8,
+                                    dataflow="carry"), path)
+    faults.corrupt_cache(path, mode)
+    autotune.reset_memory_cache()
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        assert autotune.lookup("conv2d:x", path) is None
+    quarantined = [f.name for f in tmp_path.iterdir()
+                   if ".corrupt-" in f.name]
+    assert len(quarantined) == 1
+    assert not os.path.exists(path)
+    # the cache restarts cleanly after quarantine
+    autotune.reset_memory_cache()
+    autotune.store("conv2d:y", dict(tile_h=2, tile_cout=4,
+                                    dataflow="halo"), path)
+    autotune.reset_memory_cache()
+    assert autotune.lookup("conv2d:y", path)["tile_h"] == 2
+
+
+def test_wrong_version_quarantine_names_the_version(tmp_path):
+    """A future schema version is quarantined with the version in the
+    warning (migrate-or-quarantine, never silent discard)."""
+    path = str(tmp_path / "convtune.json")
+    with open(path, "w") as f:
+        json.dump({"version": 999, "entries": {"k": {}}}, f)
+    with pytest.warns(RuntimeWarning, match="999"):
+        assert autotune.lookup("k", path) is None
+    # the quarantined file still holds the original document
+    (q,) = [f for f in tmp_path.iterdir() if ".corrupt-" in f.name]
+    with open(q) as f:
+        assert json.load(f)["version"] == 999
+
+
+def test_missing_cache_file_is_not_quarantine(tmp_path, recwarn):
+    """A cache that never existed is an empty cache — no warning, no
+    .corrupt file (quarantine is for corruption, not first run)."""
+    path = str(tmp_path / "nonexistent.json")
+    assert autotune.lookup("k", path) is None
+    assert not [w for w in recwarn.list
+                if "quarantined" in str(w.message)]
+    assert not list(tmp_path.iterdir())
+
+
+def test_malformed_record_warns_once_and_misses():
+    """A truncated/hand-edited record is a miss + ONE warning, not a
+    KeyError in the dispatch path and not a warning per conv call."""
+    key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    autotune.store(key, dict(tile_cout=8, dataflow="carry"))  # no tile_h
+    with pytest.warns(RuntimeWarning, match="malformed"):
+        assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+    # warn-once: subsequent lookups are silent misses
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+    # conv2d dispatch degrades to the default plan instead of crashing
+    x = jnp.asarray(RNG.standard_normal((1, 14, 14, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(W_SHAPE) * .3, jnp.float32)
+    _allclose(ops.conv2d(x, w), ref.conv2d(x, w))
+
+
+def test_geometry_insane_record_is_rejected():
+    """Structurally valid knobs that cannot build a ConvPlan for the
+    problem (e.g. tile_cout way past the per-group C_out after a shape
+    edit) are a miss + warning, not a crash inside the kernel."""
+    key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    autotune.store(key, dict(tile_h=4, tile_cout=10 ** 6,
+                             dataflow="carry"))
+    with pytest.warns(RuntimeWarning, match="infeasible"):
+        assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+
+
+# ---------------------------------------------------------------------------
 # Search
 # ---------------------------------------------------------------------------
 
@@ -248,9 +373,13 @@ def test_sharded_keys_never_alias_single_device():
     raw shape tuple under different (batch x spatial) splits — even
     splits with the same device count — and the single-device path are
     all distinct keys, and writing any one never shadows the others."""
-    fwd_key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0)
+    # batch 8 so every split below is geometry-feasible (the consult-site
+    # validation rejects records whose shard grid cannot divide the
+    # problem — see test_geometry_insane_record_is_rejected)
+    xb = (8, 16, 16, 8)
+    fwd_key = autotune.make_key(xb, W_SHAPE, stride=1, pad=0)
     splits = [(1, 1), (1, 4), (4, 1), (1, 8), (8, 1), (2, 4)]
-    keys = {grid: autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0,
+    keys = {grid: autotune.make_key(xb, W_SHAPE, stride=1, pad=0,
                                     op=autotune.sharded_key_op(*grid))
             for grid in splits}
     assert len({fwd_key, *keys.values()}) == len(splits) + 1
@@ -262,18 +391,18 @@ def test_sharded_keys_never_alias_single_device():
                                  dataflow="halo"))
     # each lookup sees only its own record — in particular the two
     # 8-device splits (8x1 data-parallel vs 1x8 spatial) never alias
-    assert autotune.knobs_for(X_SHAPE, W_SHAPE)["tile_h"] == 8
+    assert autotune.knobs_for(xb, W_SHAPE)["tile_h"] == 8
     for i, (bs, ss) in enumerate(splits):
-        got = autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+        got = autotune.sharded_knobs_for(xb, W_SHAPE,
                                          batch_shards=bs,
                                          spatial_shards=ss)
         assert (got["tile_h"], got["dataflow"]) == (i + 1, "halo")
-    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+    assert autotune.sharded_knobs_for(xb, W_SHAPE,
                                       spatial_shards=2) is None
     # malformed sharded records are rejected, not trusted
     autotune.store(keys[(1, 4)], dict(tile_h="bad", tile_cout=2,
                                       dataflow="halo"))
-    assert autotune.sharded_knobs_for(X_SHAPE, W_SHAPE,
+    assert autotune.sharded_knobs_for(xb, W_SHAPE,
                                       spatial_shards=4) is None
 
 
