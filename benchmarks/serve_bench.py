@@ -1,0 +1,222 @@
+"""Serving benchmark: p50/p99 latency + throughput under seeded Poisson
+open-loop load (DESIGN.md §10), emitted as ``BENCH_serving.json``.
+
+The measurement marries the two halves of the load harness: arrivals
+are a *deterministic* seeded Poisson trace (``repro.testing.load``),
+service times are the *measured* wall time of each real bucket forward
+— so the batching dynamics are reproducible per seed while the compute
+numbers are honest.  The arrival rate is auto-calibrated to ~2x the
+max-bucket service capacity, which guarantees the trace exercises at
+least two buckets: the first arrival lands on an idle queue (bucket 1)
+and the backlog that builds behind each in-flight batch drains at the
+largest bucket.
+
+Three serving invariants are asserted on every run, not just reported:
+
+* zero cold tunes after prewarm — a spy wrapped around the tuner counts
+  any ``autotune.tune`` call during the serving phase (must be 0);
+* at least two buckets actually served batches;
+* every served row bit-matches the single-request tuned forward.
+
+Run:
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json \
+      artifacts/BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --net vgg16 --scale 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:                                    # python benchmarks/serve_bench.py
+    from run import _git_rev
+except ImportError:                     # imported as benchmarks.serve_bench
+    from benchmarks.run import _git_rev
+
+import numpy as np
+
+
+def _smoke_topology():
+    from repro.core.model import ConvLayer
+    return [ConvLayer("b0", ifmap=16, in_channels=3, out_channels=8,
+                      kernel=3, stride=1, padding=1),
+            ConvLayer("b1", ifmap=16, in_channels=8, out_channels=8,
+                      kernel=3, stride=2, padding=1),
+            ConvLayer("b2", ifmap=8, in_channels=8, out_channels=16,
+                      kernel=3, stride=1, padding=1)]
+
+
+def bench(*, net, scale, buckets, replicas, requests, seed, rate,
+          fused) -> dict:
+    import jax
+    from repro.core import autotune, network_layers, scale_layers
+    from repro.core.serving import ServingEngine, replay
+    from repro.models import layers as mlayers
+    from repro.models.base import init_params
+    from repro.testing.load import poisson_arrivals
+
+    if net:
+        topo = scale_layers(network_layers(net), scale)
+    else:
+        topo = _smoke_topology()
+    params = init_params(
+        mlayers.cnn_params_from_layers(topo, n_classes=10),
+        jax.random.PRNGKey(0))
+    engine = ServingEngine.for_topology(topo, params, buckets=buckets,
+                                        n_replicas=replicas, fused=fused,
+                                        max_queue=max(1024, requests))
+
+    t0 = time.perf_counter()
+    engine.prewarm()
+    t_prewarm = time.perf_counter() - t0
+
+    # calibrate: median service time of the largest bucket, post-prewarm
+    max_b = engine.grid.max_bucket
+    shape = (max_b,) + engine.input_shape
+    zeros = np.zeros(shape, np.float32)
+    t_max = float(np.median([_timed(engine.replicas[0].fn, zeros)
+                             for _ in range(3)]))
+    if rate is None:
+        rate = 2.0 * max_b / max(t_max, 1e-6)
+
+    # spy: any tune during the serving phase is a cold tune (prewarm
+    # coverage was incomplete) — the benchmark must see zero
+    tunes_during_serving = []
+    real_tune = autotune.tune
+
+    def spy(*a, **kw):
+        tunes_during_serving.append((a, kw))
+        return real_tune(*a, **kw)
+
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((requests,) + engine.input_shape)
+    xs = xs.astype(np.float32)
+    arrivals = poisson_arrivals(rate, requests, seed=seed)
+    trace = [(arrivals[i], i, xs[i]) for i in range(requests)]
+
+    autotune.tune = spy
+    try:
+        results, rejected = replay(engine, trace)
+    finally:
+        autotune.tune = real_tune
+
+    # differential check: every served row == the single-request forward
+    mismatches = [rid for rid, row in results.items()
+                  if not np.array_equal(row, engine.forward_one(xs[rid]))]
+
+    summary = engine.recorder.summary()
+    stats = engine.stats()
+    return {
+        "net": net or "smoke-cnn", "scale": scale if net else None,
+        "buckets": list(engine.grid.buckets), "replicas": replicas,
+        "requests": requests, "seed": seed, "fused": fused,
+        "rate_rps": float(rate), "t_prewarm_s": t_prewarm,
+        "t_service_max_bucket_s": t_max,
+        "cold_tunes": stats["cold_tunes"],
+        "tunes_during_serving": len(tunes_during_serving),
+        "bit_mismatches": len(mismatches),
+        "rejected": len(rejected),
+        "summary": summary, "stats": stats,
+    }
+
+
+def _timed(fn, x) -> float:
+    t0 = time.perf_counter()
+    fn(x)
+    return time.perf_counter() - t0
+
+
+def render(res: dict) -> list[dict]:
+    s = res["summary"]
+    print(f"\n== serving bench: {res['net']} buckets={res['buckets']} "
+          f"replicas={res['replicas']} rate={res['rate_rps']:.0f} req/s "
+          f"seed={res['seed']} ==")
+    print(f"prewarm {res['t_prewarm_s']:.2f}s; max-bucket service "
+          f"{res['t_service_max_bucket_s'] * 1e3:.2f}ms")
+    hdr = f"{'bucket':>7} {'count':>6} {'p50_ms':>8} {'p99_ms':>8}"
+    print(hdr + "\n" + "-" * len(hdr))
+    rows = []
+    for b, bs in s["buckets"].items():
+        print(f"{b:>7} {bs['count']:>6} {bs['p50_s'] * 1e3:>8.2f} "
+              f"{bs['p99_s'] * 1e3:>8.2f}")
+        rows.append({"kind": "serving_bucket", "net": res["net"],
+                     "bucket": int(b), "count": bs["count"],
+                     "p50_s": bs["p50_s"], "p99_s": bs["p99_s"]})
+    print(f"{'all':>7} {s['count']:>6} {s['p50_s'] * 1e3:>8.2f} "
+          f"{s['p99_s'] * 1e3:>8.2f}   "
+          f"throughput {s['throughput_rps']:.1f} req/s, "
+          f"cold tunes {res['cold_tunes']}, "
+          f"rejected {res['rejected']}")
+    rows.append({"kind": "serving_total", "net": res["net"],
+                 "count": s["count"], "p50_s": s["p50_s"],
+                 "p99_s": s["p99_s"],
+                 "throughput_rps": s["throughput_rps"],
+                 "cold_tunes": res["cold_tunes"],
+                 "rejected": res["rejected"]})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default=None,
+                    choices=["vgg16", "alexnet", "mobilenet"],
+                    help="serve a scaled paper topology (default: the "
+                         "3-layer smoke CNN)")
+    ap.add_argument("--scale", type=int, default=32,
+                    help="channel divisor for --net")
+    ap.add_argument("--fused", action="store_true",
+                    help="serve fused residency-group megakernels")
+    ap.add_argument("--buckets", default="1,2,4",
+                    help="comma-separated batch bucket grid")
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s; default "
+                         "auto-calibrates to 2x max-bucket capacity)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI configuration (smoke CNN, 48 "
+                         "requests)")
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.net = None
+        args.requests = min(args.requests, 48)
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    res = bench(net=args.net, scale=args.scale, buckets=buckets,
+                replicas=args.replicas, requests=args.requests,
+                seed=args.seed, rate=args.rate, fused=args.fused)
+    rows = render(res)
+
+    # acceptance gates (ISSUE 8): prewarm coverage is complete, the
+    # calibrated trace exercises >= 2 buckets, responses bit-match the
+    # single-request tuned forward
+    assert res["cold_tunes"] == 0, res["cold_tunes"]
+    assert res["tunes_during_serving"] == 0, res["tunes_during_serving"]
+    assert len(res["summary"]["buckets"]) >= 2, res["summary"]["buckets"]
+    assert res["bit_mismatches"] == 0, res["bit_mismatches"]
+    print("serving gates: 0 cold tunes, "
+          f"{len(res['summary']['buckets'])} buckets exercised, "
+          "all responses bit-match the unbatched forward  [OK]")
+
+    if args.json:
+        payload = dict(rev=_git_rev(),
+                       timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       smoke=args.smoke, result=res, rows=rows)
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,21 +1,24 @@
-"""Batched CNN serving on sharded TrIM convolutions (DESIGN.md §6).
+"""Batched CNN serving on sharded TrIM convolutions, rebased onto the
+continuous-batching engine (DESIGN.md §6/§10).
 
-The `launch/serve.py`-style driver for the conv stack: requests queue up,
-get padded into fixed-size batches (one compiled program per batch
-shape), and every convolution of the forward pass runs the ``shard_map``
-halo-exchange path — images shard over the mesh's 'data' axis, output
-H-strips over 'model', with the K-1 boundary rows exchanged between
-neighbor devices before each per-shard Pallas kernel.  The modeled
-``ShardedConvPlan`` traffic of the first layer (HBM terms + the
-cross-device halo bytes) is printed next to the measured throughput so
-the analytical and observed costs sit side by side.
+Requests enter the :class:`~repro.core.serving.ServingEngine` queue and
+are served in *bucket* batches — a fixed grid of batch sizes, one
+compiled program each; partial batches pad up to the bucket and the
+padding rows are masked out of the results.  The engine prewarms the
+autotune cache and every bucket's compiled program before the first
+request, so serving never hits a cold tune.
+
+The default small CNN keeps the ``shard_map`` halo-exchange path:
+images shard over the mesh's 'data' axis, output H-strips over 'model',
+with the K-1 boundary rows exchanged between neighbor devices before
+each per-shard Pallas kernel.  The modeled ``ShardedConvPlan`` traffic
+of the first layer is printed next to the measured throughput so the
+analytical and observed costs sit side by side.
 
 ``--net vgg16|alexnet`` swaps the small CNN for a full paper topology
 (every conv layer, real spatial dims and pooling; channels divided by
-``--scale``) running on tuned, packed plans — the whole-network
-execution engine of DESIGN.md §7 behind the same batching loop.  Packed
-weights freeze a single-device layout, so ``--net`` serves single-device
-(no mesh); the default simple CNN keeps the sharded path.
+``--scale``) served through the engine's tuned guarded plans —
+``--fused`` runs the residency-group megakernels of DESIGN.md §8.
 
   PYTHONPATH=src python examples/serve_cnn.py --devices 4 --data 2 \
       --spatial 2 --requests 64 --batch 16
@@ -26,7 +29,6 @@ weights freeze a single-device layout, so ``--net`` serves single-device
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -39,10 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FusedGroupPlan, NetworkPlan, autotune, guard,
+from repro.core import (FusedGroupPlan, NetworkPlan, guard,
                         scale_layers, network_layers)
 from repro.core.conv_shard import ShardedConvPlan
 from repro.core.roofline import sharded_conv_roofline
+from repro.core.serving import Replica, ServingEngine, pow2_buckets, replay
 from repro.kernels import ops
 from repro.launch.mesh import make_conv_mesh
 from repro.models import layers
@@ -63,10 +66,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=32,
                     help="total images queued")
     ap.add_argument("--batch", type=int, default=8,
-                    help="serving batch size (requests pad up to it)")
+                    help="largest serving bucket (the grid is powers of "
+                         "two up to it; requests pad up to a bucket)")
     ap.add_argument("--net", default=None,
                     choices=["vgg16", "alexnet", "mobilenet"],
-                    help="serve a full paper topology on tuned, packed "
+                    help="serve a full paper topology on tuned guarded "
                          "plans (single-device; default: the small "
                          "sharded CNN)")
     ap.add_argument("--scale", type=int, default=16,
@@ -74,7 +78,7 @@ def main() -> None:
                          "configuration")
     ap.add_argument("--fused", action="store_true",
                     help="serve --net on fused residency-group "
-                         "megakernels (DESIGN.md §8) instead of packed "
+                         "megakernels (DESIGN.md §8) instead of "
                          "per-layer plans")
     args = ap.parse_args()
     if args.fused and not args.net:
@@ -82,25 +86,25 @@ def main() -> None:
                          "sharded per-layer path)")
 
     mesh = None
+    buckets = pow2_buckets(args.batch)
     if args.data * args.spatial > 1:
         if args.net:
-            raise SystemExit("--net serves packed single-device plans; "
+            raise SystemExit("--net serves single-device plans; "
                              "drop --data/--spatial")
         mesh = make_conv_mesh(args.data, args.spatial)
         if args.batch % args.data:
             raise SystemExit(f"--batch {args.batch} must divide over "
                              f"--data {args.data}")
+        # every bucket's batch must shard evenly over 'data'
+        buckets = tuple(b for b in buckets if b % args.data == 0)
 
-    fplan = None
     if args.net:
         topo = scale_layers(network_layers(args.net), args.scale)
         image, cin = topo[0].ifmap, topo[0].in_channels
-        autotune.tune_network(topo, n=args.batch)
         params = init_params(
             layers.cnn_params_from_layers(topo, n_classes=N_CLASSES),
             jax.random.PRNGKey(0))
         if args.fused:
-            # the megakernel streams raw weight taps itself — no packing
             fplan = FusedGroupPlan.build(topo, n=args.batch)
             fs = fplan.summary()
             print(f"{args.net} fused plan @ batch {args.batch}: "
@@ -108,23 +112,23 @@ def main() -> None:
                   f"executed {fs['executed_bytes']/1e6:.1f}MB vs "
                   f"per-layer {fs['per_layer_bytes']/1e6:.1f}MB "
                   f"({fs['executed_ratio']:.2f}x)")
-        else:
-            params = layers.cnn_pack_params(params, topo, n=args.batch)
         netplan = NetworkPlan.build(args.net, n=args.batch)
         t = netplan.hbm_bytes()
         print(f"{args.net} NetworkPlan @ batch {args.batch} (full scale): "
               f"hbm={t['total']/1e6:.1f}MB, Ops/MAcc 3dtrim "
               f"{netplan.ops_per_macc('3dtrim'):.1f} vs trim "
               f"{netplan.ops_per_macc('trim'):.1f}")
+        engine = ServingEngine.for_topology(topo, params, buckets=buckets,
+                                            fused=args.fused)
     else:
-        topo, image, cin = None, IMAGE, CIN
+        image, cin = IMAGE, CIN
         params = init_params(
             layers.simple_cnn_params(cin=CIN, channels=CHANNELS,
                                      n_classes=N_CLASSES),
             jax.random.PRNGKey(0))
 
-        # the modeled sharded traffic of the first conv layer at this
-        # batch
+        # the modeled sharded traffic of the first conv layer at the
+        # largest bucket
         kshape, _ = ops.kernel_input_shape(
             (args.batch, IMAGE, IMAGE, CIN), 3, 1, "same")
         plan = ShardedConvPlan.build(kshape, (3, 3, CIN, CHANNELS[0]),
@@ -139,51 +143,48 @@ def main() -> None:
               f"t_coll={terms.t_collective * 1e6:.2f}us, "
               f"dominant={terms.dominant})")
 
-    @jax.jit
-    def forward(p, x):
-        if topo is not None:
-            return layers.cnn_apply_from_layers(p, topo, x,
-                                                fused=args.fused,
-                                                fuse_plan=fplan)
-        return layers.simple_cnn_apply(p, x, mesh=mesh)
+        call = jax.jit(lambda p, x: layers.simple_cnn_apply(p, x,
+                                                            mesh=mesh))
+        rep = Replica(name="replica0",
+                      fn=lambda b: np.asarray(call(params,
+                                                   jnp.asarray(b))))
+        engine = ServingEngine([rep], buckets,
+                               input_shape=(image, image, cin))
+
+    engine.prewarm()
 
     rng = np.random.default_rng(0)
-    queue = rng.standard_normal(
+    xs = rng.standard_normal(
         (args.requests, image, image, cin)).astype(np.float32)
+    # the original one-shot driver drained a full queue: arrive
+    # everything at t=0 and let continuous batching carve it into
+    # max-bucket batches FIFO (service times measured from the real
+    # forwards)
+    trace = [(0.0, i, xs[i]) for i in range(args.requests)]
+    results, rejected = replay(engine, trace)
 
-    # warmup compile on the fixed batch shape
-    forward(params, jnp.zeros((args.batch, image, image, cin),
-                              jnp.float32)).block_until_ready()
-
-    served, preds, t0 = 0, [], time.perf_counter()
-    while served < args.requests:
-        chunk = queue[served:served + args.batch]
-        real = len(chunk)
-        if real < args.batch:            # pad the ragged final batch
-            chunk = np.concatenate(
-                [chunk, np.zeros((args.batch - real, image, image, cin),
-                                 np.float32)])
-        logits = forward(params, jnp.asarray(chunk))
-        preds.append(np.asarray(logits[:real]).argmax(-1))
-        served += real
-    dt = time.perf_counter() - t0
-
-    preds = np.concatenate(preds)
+    preds = np.asarray([results[i].argmax(-1)
+                        for i in sorted(results)])
+    s = engine.recorder.summary()
+    st = engine.stats()
     mesh_desc = (f"{args.data}x{args.spatial} (data x spatial)"
                  if mesh is not None else
                  f"single device ({args.net} x{args.scale})" if args.net
                  else "single device")
-    print(f"served {served} images in {dt:.2f}s "
-          f"({served / dt:.1f} img/s) on {mesh_desc}; "
+    print(f"served {st['served']} images in {s['span_s']:.2f}s "
+          f"({s['throughput_rps']:.1f} img/s) on {mesh_desc}; "
+          f"bucket batches {st['bucket_batches']}, "
+          f"cold tunes {st['cold_tunes']}, rejected {len(rejected)}; "
           f"class histogram {np.bincount(preds, minlength=N_CLASSES)}")
 
     # degraded-mode report (DESIGN.md §9): silence means every conv ran
     # on its intended tier; a served batch that survived on a fallback
     # tier is labeled, never silent
-    for e in guard.events():
-        where = f" [{e['layer']}]" if e.get("layer") else ""
-        print(f"DEGRADED: {e['tier']} -> {e['to']}{where} "
-              f"({e['kind']}): {e['error'][:100]}")
+    for name, rep_stats in st["replicas"].items():
+        for e in rep_stats["guard_events"]:
+            where = f" [{e['layer']}]" if e.get("layer") else ""
+            print(f"DEGRADED {name}: {e['tier']} -> {e['to']}{where} "
+                  f"({e['kind']}): {e['error'][:100]}")
 
 
 if __name__ == "__main__":

@@ -26,3 +26,6 @@ from repro.core.dataflow import (  # noqa: F401
 from repro.core.tiling import (  # noqa: F401
     subkernel_decomposition, plan_conv_tiles, ConvTilePlan,
 )
+from repro.core.serving import (  # noqa: F401
+    BucketGrid, QueueFull, Replica, ServingEngine, pow2_buckets, replay,
+)

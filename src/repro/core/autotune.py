@@ -687,6 +687,45 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
     return results
 
 
+def prewarm_buckets(network, buckets, *, dtype: str = "float32",
+                    dtype_bytes: int = 4, backend: str | None = None,
+                    batch_shards: int = 1, spatial_shards: int = 1,
+                    fused: bool = False, include_backward: bool = False,
+                    measure: bool = False, write: bool = True,
+                    path: str | None = None) -> dict:
+    """Warm the plan cache across a serving bucket grid (DESIGN.md §10).
+
+    Runs :func:`tune_network` once per batch bucket — every conv layer
+    of ``network`` tuned at every bucket's kernel-seen shape, so no
+    serving request (whose batch is always rounded up to a bucket) ever
+    hits a cold tune.  ``fused=True`` additionally sweeps
+    :func:`tune_fused_network` per bucket, seeding the
+    ``conv2d_fused:`` group records the megakernel path consults.
+    Buckets are deduplicated and swept ascending, so concurrent
+    prewarmers (multiple serving replicas starting at once) write the
+    same records in the same order and merge cleanly through the
+    flock+merge store.
+
+    Returns ``{bucket: {"layers": tune_network results[, "fused":
+    tune_fused_network results]}}``.
+    """
+    results: dict[int, dict] = {}
+    for n in sorted({int(b) for b in buckets}):
+        if n < 1:
+            raise ValueError(f"batch bucket must be >= 1, got {n}")
+        per = {"layers": tune_network(
+            network, n=n, dtype=dtype, dtype_bytes=dtype_bytes,
+            backend=backend, batch_shards=batch_shards,
+            spatial_shards=spatial_shards, measure=measure,
+            include_backward=include_backward, write=write, path=path)}
+        if fused:
+            per["fused"] = tune_fused_network(
+                network, n=n, dtype=dtype, dtype_bytes=dtype_bytes,
+                backend=backend, write=write, path=path)
+        results[n] = per
+    return results
+
+
 def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                   groups: int = 1, dtype: str = "float32",
                   dtype_bytes: int = 4, backend: str | None = None,

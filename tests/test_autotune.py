@@ -614,3 +614,106 @@ def test_tune_fused_network_sweep():
     for r in recs.values():
         assert r["key"].startswith("conv2d_fused:")
         assert autotune.lookup(r["key"])["strip_rows"] == r["strip_rows"]
+
+
+# ---------------------------------------------------------------------------
+# Serving prewarm (DESIGN.md §10): no cold tunes after prewarm_buckets
+# ---------------------------------------------------------------------------
+
+def _serving_topo(scale=8):
+    from repro.core import network_layers, scale_layers
+    return scale_layers(network_layers("alexnet"), scale)
+
+
+def test_prewarm_buckets_covers_every_grid_shape(monkeypatch):
+    """After ``prewarm_buckets``, every (layer, bucket) problem of the
+    grid resolves through ``knobs_for`` without a single call into the
+    tuner — the serving definition of "zero cold tunes"."""
+    from repro.core.netplan import layer_kernel_problem
+    from repro.kernels.ops import MAX_NATIVE_K
+    topo = _serving_topo()
+    buckets = (1, 2, 4)
+    recs = autotune.prewarm_buckets(topo, buckets)
+    assert sorted(recs) == [1, 2, 4]
+
+    def cold(*a, **kw):                    # any tune call is a cold tune
+        raise AssertionError(f"cold tune after prewarm: {a} {kw}")
+
+    monkeypatch.setattr(autotune, "tune", cold)
+    for b in buckets:
+        for layer in topo:
+            if layer.kernel > MAX_NATIVE_K:
+                assert "skipped" in recs[b]["layers"][layer.name]
+                continue
+            x_shape, pad, w_shape, _ = layer_kernel_problem(layer, n=b)
+            knobs = autotune.knobs_for(x_shape, w_shape,
+                                       stride=layer.stride, pad=pad,
+                                       groups=layer.groups)
+            assert knobs is not None, (layer.name, b)
+            assert knobs == {k: v for k, v in
+                             recs[b]["layers"][layer.name].items()
+                             if k in knobs}
+
+
+def test_prewarm_buckets_fused_seeds_group_records():
+    """``fused=True`` additionally sweeps the conv2d_fused group records
+    per bucket, so the megakernel path is warm too."""
+    topo = _serving_topo()
+    recs = autotune.prewarm_buckets(topo, (1, 2), fused=True)
+    for b in (1, 2):
+        fused = recs[b]["fused"]
+        assert fused, f"no fused groups recorded at bucket {b}"
+        for r in fused.values():
+            assert r["key"].startswith("conv2d_fused:")
+            assert f":n{b}:" in r["key"] or b == 1
+            assert autotune.lookup(r["key"]) is not None
+
+
+def test_prewarm_buckets_dedups_and_validates():
+    topo = _serving_topo()
+    with pytest.raises(ValueError):
+        autotune.prewarm_buckets(topo, (0, 2))
+    recs = autotune.prewarm_buckets(topo, (2, 1, 2, 1))
+    assert sorted(recs) == [1, 2]
+
+
+_PREWARM_WORKER = r"""
+import sys
+from repro.core import autotune, network_layers, scale_layers
+path = sys.argv[1]
+topo = scale_layers(network_layers("alexnet"), 8)
+autotune.prewarm_buckets(topo, (1, 2), path=path)
+print("done")
+"""
+
+
+def test_concurrent_prewarm_merges_cleanly(tmp_path):
+    """ISSUE 8: 4 serving replicas prewarming the same cache path at
+    once (the multi-replica startup race) lose nothing — every record a
+    solo prewarm would write is present after the concurrent ones merge
+    through the flock+merge store."""
+    import subprocess
+    import sys
+    path = str(tmp_path / "convtune.json")
+    env = dict(os.environ, PYTHONPATH="src")
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _PREWARM_WORKER, path],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for _ in range(4)]
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err
+
+    # the expected key set: what a single prewarm would persist
+    topo = _serving_topo()
+    want = set()
+    for per in autotune.prewarm_buckets(topo, (1, 2),
+                                        write=False).values():
+        want |= {r["key"] for r in per["layers"].values()
+                 if "key" in r}
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    missing = want - set(entries)
+    assert not missing, f"lost {len(missing)}/{len(want)}: " \
+                        f"{sorted(missing)[:5]}"

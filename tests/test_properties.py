@@ -400,3 +400,106 @@ def test_fused_group_geometry_chains(net, n, strip_rows):
         assert lt.pool_rows == g.strip_rows
         assert g.n_strips * g.strip_rows >= lt.h_pool
         assert (g.n_strips - 1) * g.strip_rows < lt.h_pool
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine invariants (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _random_grid(rng, max_bucket):
+    """A random bucket grid that always contains max_bucket (so every
+    trace fits) plus a random subset of smaller sizes."""
+    from repro.core.serving import BucketGrid
+    smaller = [b for b in range(1, max_bucket)
+               if rng.integers(2)]
+    return BucketGrid.build(tuple(smaller) + (max_bucket,))
+
+
+def _policy_engine(grid, n_replicas, max_queue=10_000):
+    from repro.core.serving import Replica, ServingEngine
+    reps = [Replica(name=f"r{i}", fn=lambda b: np.asarray(b)[:, 0])
+            for i in range(n_replicas)]
+    return ServingEngine(reps, grid, max_queue=max_queue)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), max_bucket=st.integers(1, 64))
+def test_bucket_for_is_minimal_and_in_grid(seed, max_bucket):
+    rng = np.random.default_rng(seed)
+    grid = _random_grid(rng, max_bucket)
+    for n in range(1, max_bucket + 1):
+        b = grid.bucket_for(n)
+        assert b in grid.buckets and b >= n
+        smaller = [g for g in grid.buckets if n <= g < b]
+        assert not smaller, (n, b, grid.buckets)
+        assert grid.pad_rows(n) == b - n
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60),
+       max_bucket=st.integers(1, 8), n_replicas=st.integers(1, 3),
+       rate=st.floats(0.5, 50.0), service=st.floats(0.001, 0.5))
+def test_every_request_served_exactly_once(seed, n, max_bucket,
+                                           n_replicas, rate, service):
+    """Conservation under unbounded queueing: completions == arrivals,
+    each request exactly once, and the recorder agrees."""
+    from repro.core.serving import replay
+    from repro.testing.load import poisson_arrivals
+    rng = np.random.default_rng(seed)
+    eng = _policy_engine(_random_grid(rng, max_bucket), n_replicas)
+    xs = rng.standard_normal((n, 3)).astype(np.float32)
+    trace = [(t, i, xs[i]) for i, t in
+             enumerate(poisson_arrivals(rate, n, seed=seed))]
+    results, rejected = replay(eng, trace,
+                               service_model=lambda b: service)
+    assert not rejected
+    assert sorted(results) == list(range(n))      # exactly once, all
+    recs = eng.recorder.completed()
+    assert len(recs) == n
+    assert sorted(r.rid for r in recs) == list(range(n))
+    for r in recs:                                 # sane lifecycles
+        assert r.t_enqueue <= r.t_execute <= r.t_complete
+        assert 1 <= r.batch_real <= r.bucket
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60),
+       max_bucket=st.integers(1, 8), max_queue_extra=st.integers(0, 8),
+       service=st.floats(0.01, 0.5))
+def test_bounded_queue_conserves_requests(seed, n, max_bucket,
+                                          max_queue_extra, service):
+    """With backpressure, served + shed still equals arrivals (nothing
+    lost, nothing duplicated) and the queue bound holds."""
+    from repro.core.serving import replay
+    rng = np.random.default_rng(seed)
+    grid = _random_grid(rng, max_bucket)
+    max_queue = grid.max_bucket + max_queue_extra
+    eng = _policy_engine(grid, 1, max_queue=max_queue)
+    # all-at-once burst: the hardest case for the bound
+    trace = [(0.0, i, np.zeros(3, np.float32)) for i in range(n)]
+    results, rejected = replay(eng, trace,
+                               service_model=lambda b: service)
+    assert sorted(list(results) + rejected) == list(range(n))
+    assert set(results).isdisjoint(rejected)
+    assert eng.recorder.max_queue_depth <= max_queue
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 40),
+       max_bucket=st.integers(1, 8), service=st.floats(0.001, 0.5))
+def test_latency_monotone_in_queue_position_under_fifo(seed, n,
+                                                       max_bucket,
+                                                       service):
+    """For simultaneous arrivals on one replica, FIFO makes completion
+    time — hence latency — nondecreasing in queue position."""
+    from repro.core.serving import replay
+    rng = np.random.default_rng(seed)
+    eng = _policy_engine(_random_grid(rng, max_bucket), 1)
+    trace = [(0.0, i, np.zeros(3, np.float32)) for i in range(n)]
+    replay(eng, trace, service_model=lambda b: service)
+    recs = sorted(eng.recorder.records.values(), key=lambda r: r.rid)
+    lats = [r.latency for r in recs]
+    assert all(a <= b for a, b in zip(lats, lats[1:])), lats
+    # FIFO also means batch order follows rid order
+    execs = [r.t_execute for r in recs]
+    assert all(a <= b for a, b in zip(execs, execs[1:]))
