@@ -48,8 +48,16 @@ import time
 import warnings
 
 from repro.core.conv_plan import ConvPlan, input_grad_geometry
-from repro.core.roofline import conv_plan_roofline
+from repro.core.roofline import conv_plan_roofline, dtype_width
 from repro.core.tiling import VMEM_BYTES
+
+
+def _resolve_bytes(dtype_bytes, dtype: str) -> int:
+    """Width of the tuned problem's activations: an explicit
+    ``dtype_bytes`` wins, otherwise it is derived from ``dtype`` via the
+    shared :func:`repro.core.roofline.dtype_width` table (so a bf16 or
+    int8 tune never scores with f32 traffic)."""
+    return dtype_width(dtype) if dtype_bytes is None else dtype_bytes
 
 try:
     import fcntl
@@ -245,7 +253,7 @@ def _reject(key: str, reason: str, path: str | None) -> None:
 
 def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
               groups: int = 1, dtype: str = "float32",
-              backend: str | None = None,
+              backend: str | None = None, op: str = "conv2d",
               path: str | None = None) -> dict | None:
     """The cached (validated) knobs for a problem, or None — the lookup
     ``ops.conv2d`` performs by default.  Honors ``REPRO_CONV_AUTOTUNE=0``.
@@ -259,7 +267,7 @@ def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
     if os.environ.get(AUTOTUNE_ENV, "1") == "0":
         return None
     key = make_key(x_shape, w_shape, stride=stride, pad=pad,
-                   groups=groups, dtype=dtype, backend=backend)
+                   groups=groups, dtype=dtype, backend=backend, op=op)
     rec = lookup(key, path)
     if rec is None:
         return None
@@ -268,7 +276,8 @@ def knobs_for(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
         return None
     try:        # knob sanity against the current plan geometry
         plan = ConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
-                              groups=groups, tile_h=rec["tile_h"],
+                              groups=groups, dtype_bytes=dtype_width(dtype),
+                              tile_h=rec["tile_h"],
                               tile_cout=rec["tile_cout"],
                               dataflow=rec["dataflow"])
         if plan.vmem_resident_bytes > VMEM_BYTES:
@@ -390,14 +399,26 @@ def _measure_plan(plan: ConvPlan, *, stride, pad, groups,
     from repro.kernels.trim_conv2d import trim_conv2d
     rng = np.random.default_rng(0)
     dt = jnp.dtype(dtype)
-    x = jnp.asarray(rng.standard_normal((plan.n, plan.h, plan.w, plan.cin)),
-                    dt)
-    w = jnp.asarray(rng.standard_normal(
-        (plan.kh, plan.kw, plan.cin_per_group, plan.cout)) * 0.1, dt)
+    scale = None
+    if jnp.issubdtype(dt, jnp.integer):
+        # the int8 route: integer operands + a unit dequant scale row
+        # (the knobs are timing-relevant, the calibration is not)
+        x = jnp.asarray(rng.integers(-128, 128,
+                                     (plan.n, plan.h, plan.w, plan.cin)), dt)
+        w = jnp.asarray(rng.integers(-128, 128,
+                                     (plan.kh, plan.kw, plan.cin_per_group,
+                                      plan.cout)), dt)
+        scale = jnp.ones((plan.cout,), jnp.float32)
+    else:
+        x = jnp.asarray(rng.standard_normal(
+            (plan.n, plan.h, plan.w, plan.cin)), dt)
+        w = jnp.asarray(rng.standard_normal(
+            (plan.kh, plan.kw, plan.cin_per_group, plan.cout)) * 0.1, dt)
 
     def call():
-        trim_conv2d(x, w, stride=stride, pad=pad, groups=groups,
-                    tile_h=plan.tile_h, tile_cout=plan.tile_cout,
+        trim_conv2d(x, w, None, scale, stride=stride, pad=pad,
+                    groups=groups, tile_h=plan.tile_h,
+                    tile_cout=plan.tile_cout,
                     dataflow=plan.dataflow).block_until_ready()
 
     for _ in range(warmup):
@@ -409,8 +430,10 @@ def _measure_plan(plan: ConvPlan, *, stride, pad, groups,
 
 
 def tune(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
-         groups: int = 1, dtype: str = "float32", dtype_bytes: int = 4,
-         backend: str | None = None, measure: bool = False,
+         groups: int = 1, dtype: str = "float32",
+         dtype_bytes: int | None = None,
+         backend: str | None = None, op: str = "conv2d",
+         measure: bool = False,
          measure_top_k: int = 4, write: bool = True,
          path: str | None = None) -> dict:
     """Tune one conv problem and (by default) persist the winner.
@@ -422,7 +445,8 @@ def tune(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
     interpreter cost, pipeline ramp) get captured.
     """
     plans = candidate_knobs(x_shape, w_shape, stride=stride, pad=pad,
-                            groups=groups, dtype_bytes=dtype_bytes)
+                            groups=groups,
+                            dtype_bytes=_resolve_bytes(dtype_bytes, dtype))
     if not plans:
         raise ValueError(f"no feasible candidates for {x_shape}/{w_shape}")
     ranked = sorted(plans, key=_model_score)
@@ -437,7 +461,7 @@ def tune(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
         record = _as_record(ranked[0], source="model")
     if write:
         store(make_key(x_shape, w_shape, stride=stride, pad=pad,
-                       groups=groups, dtype=dtype, backend=backend),
+                       groups=groups, dtype=dtype, backend=backend, op=op),
               record, path)
     return record
 
@@ -479,7 +503,8 @@ def candidate_weight_grad_knobs(x_shape, w_shape, *, stride: int = 1,
 
 def tune_weight_grad(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                      groups: int = 1, dtype: str = "float32",
-                     dtype_bytes: int = 4, backend: str | None = None,
+                     dtype_bytes: int | None = None,
+                     backend: str | None = None,
                      write: bool = True, path: str | None = None) -> dict:
     """Tune the weight-gradient kernel for one forward problem and (by
     default) persist the winner under its ``conv2d_wgrad`` key.  Ranked
@@ -488,7 +513,8 @@ def tune_weight_grad(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
     overhead is pure latency)."""
     plans = candidate_weight_grad_knobs(x_shape, w_shape, stride=stride,
                                         pad=pad, groups=groups,
-                                        dtype_bytes=dtype_bytes)
+                                        dtype_bytes=_resolve_bytes(
+                                            dtype_bytes, dtype))
     if not plans:
         raise ValueError(f"no feasible wgrad candidates for "
                          f"{x_shape}/{w_shape}")
@@ -564,7 +590,8 @@ def sharded_knobs_for(x_shape, w_shape, *, batch_shards: int = 1,
 def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
                  spatial_shards: int = 1, stride: int = 1, pad: int = 0,
                  groups: int = 1, dtype: str = "float32",
-                 dtype_bytes: int = 4, backend: str | None = None,
+                 dtype_bytes: int | None = None,
+                 backend: str | None = None,
                  write: bool = True, path: str | None = None) -> dict:
     """Tune one *sharded* conv problem and (by default) persist the
     winner under its ``conv2d_shard:<ndev>`` key.
@@ -577,6 +604,7 @@ def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
     """
     from repro.core.conv_shard import ShardedConvPlan
     from repro.core.roofline import sharded_conv_roofline
+    dtype_bytes = _resolve_bytes(dtype_bytes, dtype)
     base = ShardedConvPlan.build(x_shape, w_shape, stride=stride, pad=pad,
                                  groups=groups, dtype_bytes=dtype_bytes,
                                  batch_shards=batch_shards,
@@ -616,7 +644,8 @@ def tune_sharded(x_shape, w_shape, *, batch_shards: int = 1,
 # ---------------------------------------------------------------------------
 
 def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
-                 dtype_bytes: int = 4, backend: str | None = None,
+                 dtype_bytes: int | None = None,
+                 backend: str | None = None, op: str = "conv2d",
                  batch_shards: int = 1, spatial_shards: int = 1,
                  measure: bool = False, include_backward: bool = False,
                  write: bool = True, path: str | None = None) -> dict:
@@ -633,7 +662,9 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
     tuned once; layers with ``K > MAX_NATIVE_K`` (AlexNet's 11x11) run
     on the kernel-tiled path that never consults the cache and are
     recorded as skipped.  ``include_backward`` additionally seeds both
-    cotangent records per layer (:func:`tune_backward`).
+    cotangent records per layer (:func:`tune_backward`).  ``op`` selects
+    the single-device key namespace (``"conv2d_q8"`` seeds the int8
+    inference path; pair it with ``dtype="int8"``).
 
     Returns ``{layer_name: record}`` with ``record["key"]`` the cache
     key written (or ``{"skipped": reason}``).
@@ -662,11 +693,11 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
         # the shared layer -> executed-problem mapping (raises on
         # padding the execution path cannot reproduce)
         x_shape, pad, w_shape, _ = layer_kernel_problem(layer, n=n)
-        op = "conv2d" if not sharded \
+        layer_op = op if not sharded \
             else sharded_key_op(batch_shards, spatial_shards)
         key = make_key(x_shape, w_shape, stride=layer.stride, pad=pad,
                        groups=layer.groups, dtype=dtype, backend=backend,
-                       op=op)
+                       op=layer_op)
         if key in seen:
             results[layer.name] = seen[key]
             continue
@@ -678,7 +709,8 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
                                batch_shards=batch_shards,
                                spatial_shards=spatial_shards, **common)
         else:
-            rec = tune(x_shape, w_shape, measure=measure, **common)
+            rec = tune(x_shape, w_shape, measure=measure, op=layer_op,
+                       **common)
         rec = dict(rec, key=key)
         if include_backward and not sharded:
             rec["backward"] = tune_backward(x_shape, w_shape, **common)
@@ -688,7 +720,8 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
 
 
 def prewarm_buckets(network, buckets, *, dtype: str = "float32",
-                    dtype_bytes: int = 4, backend: str | None = None,
+                    dtype_bytes: int | None = None,
+                    backend: str | None = None, op: str = "conv2d",
                     batch_shards: int = 1, spatial_shards: int = 1,
                     fused: bool = False, include_backward: bool = False,
                     measure: bool = False, write: bool = True,
@@ -715,7 +748,7 @@ def prewarm_buckets(network, buckets, *, dtype: str = "float32",
             raise ValueError(f"batch bucket must be >= 1, got {n}")
         per = {"layers": tune_network(
             network, n=n, dtype=dtype, dtype_bytes=dtype_bytes,
-            backend=backend, batch_shards=batch_shards,
+            backend=backend, op=op, batch_shards=batch_shards,
             spatial_shards=spatial_shards, measure=measure,
             include_backward=include_backward, write=write, path=path)}
         if fused:
@@ -728,7 +761,8 @@ def prewarm_buckets(network, buckets, *, dtype: str = "float32",
 
 def tune_backward(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
                   groups: int = 1, dtype: str = "float32",
-                  dtype_bytes: int = 4, backend: str | None = None,
+                  dtype_bytes: int | None = None,
+                  backend: str | None = None,
                   measure: bool = False, write: bool = True,
                   path: str | None = None) -> dict:
     """Tune both cotangents of one forward problem.
@@ -801,7 +835,7 @@ def fused_knobs_for(signature: str, *, n: int = 1, dtype: str = "float32",
 
 
 def tune_fused(layers, *, start: int = 0, pools=None, n: int = 1,
-               dtype: str = "float32", dtype_bytes: int = 4,
+               dtype: str = "float32", dtype_bytes: int | None = None,
                backend: str | None = None, vmem_budget: int | None = None,
                write: bool = True, path: str | None = None) -> dict:
     """Tune the strip height of one fused group (a layer chain) and (by
@@ -817,6 +851,7 @@ def tune_fused(layers, *, start: int = 0, pools=None, n: int = 1,
     from repro.core.fuse_plan import (FUSED_VMEM_BUDGET, build_group,
                                       _strip_candidates)
     from repro.core.roofline import conv_plan_roofline
+    dtype_bytes = _resolve_bytes(dtype_bytes, dtype)
     if vmem_budget is None:
         vmem_budget = FUSED_VMEM_BUDGET
     probe = build_group(layers, start, n=n, strip_rows=1,
@@ -849,7 +884,8 @@ def tune_fused(layers, *, start: int = 0, pools=None, n: int = 1,
 
 
 def tune_fused_network(network="vgg16", *, n: int = 1,
-                       dtype: str = "float32", dtype_bytes: int = 4,
+                       dtype: str = "float32",
+                       dtype_bytes: int | None = None,
                        backend: str | None = None,
                        residency: str = "auto",
                        write: bool = True, path: str | None = None) -> dict:
@@ -866,6 +902,7 @@ def tune_fused_network(network="vgg16", *, n: int = 1,
     from repro.core.netplan import infer_pools, network_layers
     layers = list(network_layers(network))
     pools = list(infer_pools(layers))
+    dtype_bytes = _resolve_bytes(dtype_bytes, dtype)
     plan = FusedGroupPlan.build(layers, n=n, dtype_bytes=dtype_bytes,
                                 residency=residency)
     results: dict[str, dict] = {}

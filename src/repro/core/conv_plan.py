@@ -71,9 +71,24 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from repro.core.roofline import dtype_width
+
 # Default budget for the auto-chosen input strip: half of a ~16 MiB VMEM
 # core, leaving headroom for the weight tile, accumulator and pipelining.
 STRIP_VMEM_BUDGET = 8 << 20
+
+
+def resolve_dtype_bytes(dtype_bytes) -> int:
+    """Normalize a plan's ``dtype_bytes`` argument.
+
+    Plain ints pass through; anything dtype-like (``"bfloat16"``, ``"s8"``,
+    ``np.dtype``, an array's ``.dtype``) is priced through the shared
+    :func:`repro.core.roofline.dtype_width` table so plan traffic and
+    roofline HLO parsing can never disagree on a width.
+    """
+    if isinstance(dtype_bytes, int):
+        return dtype_bytes
+    return dtype_width(dtype_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +192,7 @@ class ConvPlan:
             raise ValueError(
                 f"weights expect cin/groups={cin_pg} with groups={groups}, "
                 f"input has cin={cin}")
+        dtype_bytes = resolve_dtype_bytes(dtype_bytes)
         s = stride
         cout_pg = cout // groups
         if tile_cout is None:
@@ -254,6 +270,7 @@ class ConvPlan:
             raise ValueError(
                 f"weights expect cin/groups={cin_pg} with groups={groups}, "
                 f"input has cin={cin}")
+        dtype_bytes = resolve_dtype_bytes(dtype_bytes)
         h_out = (h + 2 * pad - kh) // stride + 1
         cout_pg = cout // groups
         if tile_cout is None:
@@ -757,6 +774,7 @@ class Conv1dPlan:
               tile_d: int | None = None) -> "Conv1dPlan":
         b, length, d = x_shape
         k, _ = w_shape
+        dtype_bytes = resolve_dtype_bytes(dtype_bytes)
         if tile_l is None:
             tile_l = min(length, 512)
         if tile_d is None:

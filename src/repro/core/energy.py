@@ -82,16 +82,28 @@ ENERGY_PJ = {
     "dram_access": 640.0,     # external memory, per 32-bit word
     "sram_access": 5.0,       # large on-chip buffer
     "register": 0.06,         # local register move (shift / shadow)
-    "mac_int8": 0.23,
+    "mac_int8": 0.23,         # 8-bit multiply-accumulate
+    "mac_fp32": 4.6,          # fp32 mult (3.7) + add (0.9)
 }
 
 
 def energy_per_layer(layer: acc_model.ConvLayer,
-                     hw: acc_model.HWConfig) -> dict:
-    """Energy (uJ) split between external accesses and compute."""
+                     hw: acc_model.HWConfig, *,
+                     dtype_bytes: int = 1,
+                     mac: str = "mac_int8") -> dict:
+    """Energy (uJ) split between external accesses and compute.
+
+    ``core.model.layer_accesses`` counts *element* accesses; the DRAM
+    reference energy is per 32-bit word, so a transfer is billed at
+    ``dtype_bytes / 4`` of it — an int8 element (the paper's silicon,
+    the default) moves a quarter of the bytes an f32 element does.
+    ``mac`` picks the MAC energy (``"mac_int8"`` / ``"mac_fp32"``),
+    which together with ``dtype_bytes`` prices a whole network in either
+    precision (the ``--energy`` report of ``benchmarks/paper_eval.py``).
+    """
     acc = acc_model.layer_accesses(layer, hw)
-    e_mem = acc.total * ENERGY_PJ["dram_access"]
-    e_mac = layer.macs * ENERGY_PJ["mac_int8"]
+    e_mem = acc.total * ENERGY_PJ["dram_access"] * (dtype_bytes / 4.0)
+    e_mac = layer.macs * ENERGY_PJ[mac]
     # every MAC implies ~3 register moves (activation shift, psum, product)
     e_reg = layer.macs * 3 * ENERGY_PJ["register"]
     return {
@@ -104,15 +116,40 @@ def energy_per_layer(layer: acc_model.ConvLayer,
     }
 
 
+_NETWORK_LAYER_FNS = {
+    "vgg16": acc_model.vgg16_layers,
+    "alexnet": acc_model.alexnet_layers,
+    "mobilenet": acc_model.mobilenet_layers,
+}
+
+
 def energy_per_inference(network: str = "vgg16",
-                         hw: acc_model.HWConfig = acc_model.TRIM_3D) -> dict:
-    layers = (acc_model.vgg16_layers() if network == "vgg16"
-              else acc_model.alexnet_layers())
-    per = [energy_per_layer(l, hw) for l in layers]
+                         hw: acc_model.HWConfig = acc_model.TRIM_3D, *,
+                         dtype_bytes: int = 1,
+                         mac: str = "mac_int8") -> dict:
+    """Modeled energy for one inference of a whole network.
+
+    ``tops_per_watt`` is the modeled efficiency of the access pattern:
+    total OPs (2 per MAC) divided by total modeled energy — 1 OP/pJ is
+    exactly 1 TOPS/W, so the figure is directly comparable to the
+    paper's Table I silicon numbers.
+    """
+    try:
+        layers = _NETWORK_LAYER_FNS[network]()
+    except KeyError:
+        raise ValueError(f"unknown network {network!r}; choose from "
+                         f"{sorted(_NETWORK_LAYER_FNS)}") from None
+    per = [energy_per_layer(l, hw, dtype_bytes=dtype_bytes, mac=mac)
+           for l in layers]
+    total_uJ = sum(p["total_uJ"] for p in per)
+    ops = 2 * sum(l.macs for l in layers)
     return {
         "network": network,
         "hw": hw.name,
-        "total_uJ": sum(p["total_uJ"] for p in per),
+        "dtype_bytes": dtype_bytes,
+        "mac": mac,
+        "total_uJ": total_uJ,
         "memory_uJ": sum(p["memory_uJ"] for p in per),
+        "tops_per_watt": ops / (total_uJ * 1e6),   # OPs / pJ == TOPS/W
         "layers": per,
     }

@@ -60,6 +60,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from repro.core import roofline
 from repro.core.conv_plan import STRIP_VMEM_BUDGET
 from repro.core.netplan import (NetworkPlan, RESIDENCY_BUDGET, infer_pools,
                                 layer_kernel_problem, network_layers,
@@ -379,7 +380,7 @@ class FusedGroupPlan:
     layer_exec_bytes: tuple   # per-layer executed byte dicts (see below)
 
     @classmethod
-    def build(cls, network, *, n: int = 1, dtype_bytes: int = 4,
+    def build(cls, network, *, n: int = 1, dtype_bytes: int | None = None,
               residency: str = "auto",
               residency_budget: int = RESIDENCY_BUDGET,
               vmem_budget: int = FUSED_VMEM_BUDGET,
@@ -401,6 +402,8 @@ class FusedGroupPlan:
         per-layer execution); ``strip_rows`` forces the strip height
         instead of tuning/modelling it.
         """
+        if dtype_bytes is None:
+            dtype_bytes = roofline.dtype_width(dtype)
         layers = list(network_layers(network))
         pools = list(infer_pools(layers))
         nplan = NetworkPlan.build(layers, n=n, dtype_bytes=dtype_bytes,

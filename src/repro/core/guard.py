@@ -57,9 +57,10 @@ GUARD_ENV = "REPRO_CONV_GUARD"          # "1" -> NaN/Inf numerics guard on
 STRICT_ENV = "REPRO_CONV_GUARD_STRICT"  # "1" -> re-raise, never demote
 RING_SIZE = 256
 
-#: canonical tier order, fastest first — chains are (contiguous
-#: sub-sequences of) this
-TIER_CHAIN = ("fused", "sharded", "pallas", "ref")
+#: canonical tier order, fastest first — chains are sub-sequences of
+#: this (the ``q8`` int8 kernel tier only appears in the quantized
+#: chain ``q8 -> pallas -> ref`` of ``ops._conv2d_q8``, DESIGN.md §11)
+TIER_CHAIN = ("fused", "sharded", "q8", "pallas", "ref")
 
 _LOCK = threading.Lock()
 _EVENTS: collections.deque = collections.deque(maxlen=RING_SIZE)

@@ -45,6 +45,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from repro.core import roofline
 from repro.core.conv_plan import STRIP_VMEM_BUDGET, ConvPlan
 from repro.core.conv_shard import ShardedConvPlan
 from repro.core.model import (ConvLayer, alexnet_layers, mobilenet_layers,
@@ -286,7 +287,8 @@ class NetworkPlan:
     residency: str = "auto"
 
     @classmethod
-    def build(cls, network="vgg16", *, n: int = 1, dtype_bytes: int = 4,
+    def build(cls, network="vgg16", *, n: int = 1,
+              dtype_bytes: int | None = None,
               dataflow: str = "carry", residency: str = "auto",
               residency_budget: int = RESIDENCY_BUDGET,
               fold_pooling: bool = True,
@@ -312,6 +314,8 @@ class NetworkPlan:
         if residency not in ("auto", "never", "always"):
             raise ValueError(f"residency={residency!r} must be "
                              "'auto', 'never' or 'always'")
+        if dtype_bytes is None:
+            dtype_bytes = roofline.dtype_width(dtype)
         layers = network_layers(network)
         if not layers:
             raise ValueError("empty topology")

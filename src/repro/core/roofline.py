@@ -41,6 +41,36 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16,
 }
 
+# numpy/jax spellings of the HLO names above, so every subsystem (plans,
+# autotune, energy, HLO parsing) prices widths from this one table.
+_DTYPE_NAME_ALIASES = {
+    "bool": "pred", "int4": "s4", "uint4": "u4", "int8": "s8",
+    "uint8": "u8", "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+    "int16": "s16", "uint16": "u16", "bfloat16": "bf16", "float16": "f16",
+    "int32": "s32", "uint32": "u32", "float32": "f32", "int64": "s64",
+    "uint64": "u64", "float64": "f64", "complex64": "c64",
+    "complex128": "c128",
+}
+
+
+def dtype_width(dtype) -> int:
+    """Byte width of ``dtype`` — the single width table for every plan.
+
+    Accepts HLO names (``"f32"``, ``"s8"``), numpy/jax names
+    (``"float32"``, ``"int8"``, ``"bfloat16"``) and dtype objects
+    (``jnp.bfloat16``, ``np.dtype("float32")``, an array's ``.dtype``).
+    """
+    if isinstance(dtype, str):
+        name = dtype
+    else:
+        import numpy as np
+        name = np.dtype(dtype).name
+    name = _DTYPE_NAME_ALIASES.get(name, name)
+    try:
+        return _DTYPE_BYTES[name]
+    except KeyError:
+        raise ValueError(f"unknown dtype {dtype!r}") from None
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")

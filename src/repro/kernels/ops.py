@@ -81,6 +81,18 @@ class PackedConv2dWeights:
     site doesn't override them.  Registered as a pytree (arrays are
     leaves, knobs are static) so packed params live in checkpointed /
     jitted parameter trees like any other weight.
+
+    The int8 route (DESIGN.md §11) adds three quantization leaves,
+    produced by :func:`quantize_conv2d_weights` /
+    ``models.layers.calibrate_conv2d``: ``scale`` is the per-out-channel
+    symmetric *weight* scale in the same padded ``(1, G * CoutP)`` row
+    layout as ``bias`` (padded lanes hold 1.0 so the bias
+    requantization of ``ref.dequant_params`` never divides by zero);
+    ``zero_point`` / ``input_scale`` are the scalar per-tensor affine
+    activation calibration.  A non-None ``scale`` is what routes
+    ``ops.conv2d`` onto the quantized tier chain; ``w`` is then int8
+    and ``bias`` stays the original f32 row (the effective int32 bias
+    is derived per call).
     """
 
     w: jax.Array
@@ -90,15 +102,24 @@ class PackedConv2dWeights:
     tile_cout: int
     tile_h: int | None = None
     dataflow: str | None = None
+    scale: jax.Array | None = None
+    zero_point: jax.Array | None = None
+    input_scale: jax.Array | None = None
 
     def tree_flatten(self):
-        return ((self.w, self.bias),
+        return ((self.w, self.bias, self.scale, self.zero_point,
+                 self.input_scale),
                 (self.cout, self.groups, self.tile_cout, self.tile_h,
                  self.dataflow))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        w, bias, scale, zero_point, input_scale = children
+        cout, groups, tile_cout, tile_h, dataflow = aux
+        return cls(w=w, bias=bias, cout=cout, groups=groups,
+                   tile_cout=tile_cout, tile_h=tile_h, dataflow=dataflow,
+                   scale=scale, zero_point=zero_point,
+                   input_scale=input_scale)
 
 
 def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
@@ -107,7 +128,8 @@ def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
                         dataflow: str | None = None,
                         x_shape=None, stride: int = 1,
                         padding: str = "same",
-                        dtype: str = "float32") -> PackedConv2dWeights:
+                        dtype: str | None = None,
+                        op: str = "conv2d") -> PackedConv2dWeights:
     """Pad/reshape conv weights to the kernel layout once, at load time.
 
     w: (K, K, Cin/groups, Cout); bias: (Cout,) or None.  The packed
@@ -115,6 +137,11 @@ def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
     the plan's MXU-friendly choice.  When ``x_shape`` is given and knobs
     are unset, the autotune cache is consulted (same key ``conv2d`` would
     use for that input) so the packed layout matches the tuned plan.
+    ``dtype`` defaults to the *weight* dtype (the activations of a
+    homogeneous network match it); pass it explicitly for mixed-dtype
+    call sites so the cache consult keys on the activation dtype the
+    conv will actually run with.  ``op`` picks the cache namespace
+    (``"conv2d_q8"`` for the int8 route).
     """
     kh, kw, cin_pg, cout = w.shape
     if kh > MAX_NATIVE_K:
@@ -123,11 +150,13 @@ def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
             "weights per sub-kernel and cannot consume packed weights")
     if cout % groups:
         raise ValueError(f"groups={groups} must divide cout={cout}")
+    if dtype is None:
+        dtype = str(w.dtype)
     if x_shape is not None and (tile_cout is None or tile_h is None
                                 or dataflow is None):
         xs, pad = kernel_input_shape(x_shape, kh, stride, padding)
         rec = autotune.knobs_for(xs, w.shape, stride=stride, pad=pad,
-                                 groups=groups, dtype=dtype)
+                                 groups=groups, dtype=dtype, op=op)
         if rec is not None:
             tile_cout = tile_cout if tile_cout is not None \
                 else rec["tile_cout"]
@@ -150,6 +179,45 @@ def pack_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
     return PackedConv2dWeights(w=wk, bias=bp, cout=cout, groups=groups,
                                tile_cout=tile_cout, tile_h=tile_h,
                                dataflow=dataflow)
+
+
+def quantize_conv2d_weights(w: jax.Array, bias: jax.Array | None = None, *,
+                            x_scale, x_zero_point=0, groups: int = 1,
+                            tile_cout: int | None = None,
+                            tile_h: int | None = None,
+                            dataflow: str | None = None,
+                            x_shape=None, stride: int = 1,
+                            padding: str = "same") -> PackedConv2dWeights:
+    """Quantize + pack conv weights for the int8 route (DESIGN.md §11).
+
+    w: f32 (K, K, Cin/groups, Cout); bias: (Cout,) or None.
+    Per-out-channel symmetric weight scales (``ref.weight_scales_int8``),
+    per-tensor affine activation calibration ``(x_scale, x_zero_point)``
+    — typically from ``models.layers.calibrate_conv2d`` over a sample
+    batch.  Returns a :class:`PackedConv2dWeights` whose non-None
+    ``scale`` routes ``ops.conv2d`` onto the quantized tier chain.
+    """
+    w_scale = ref.weight_scales_int8(w)
+    w_q = ref.quantize_int8(w, w_scale[None, None, None, :])
+    pk = pack_conv2d_weights(w_q, None, groups=groups, tile_cout=tile_cout,
+                             tile_h=tile_h, dataflow=dataflow,
+                             x_shape=x_shape, stride=stride,
+                             padding=padding, dtype="int8", op="conv2d_q8")
+    cpp = pk.w.shape[3] // groups
+    cout_pg = pk.cout // groups
+    # padded lanes hold scale 1.0 (not 0): ref.dequant_params divides the
+    # real bias by the scale, and 0-scale lanes would round NaN to int32
+    sp = jnp.pad(w_scale.reshape(groups, cout_pg),
+                 ((0, 0), (0, cpp - cout_pg)),
+                 constant_values=1.0).reshape(1, groups * cpp)
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.astype(jnp.float32).reshape(groups, cout_pg),
+                     ((0, 0), (0, cpp - cout_pg))).reshape(1, groups * cpp)
+    return dataclasses.replace(
+        pk, bias=bp, scale=sp,
+        zero_point=jnp.asarray(x_zero_point, jnp.int32),
+        input_scale=jnp.asarray(x_scale, jnp.float32))
 
 
 def kernel_input_shape(x_shape, k: int, stride: int, padding: str):
@@ -558,6 +626,14 @@ def _conv2d_packed(x: jax.Array, pk: PackedConv2dWeights, *,
     if impl != "pallas":
         raise ValueError(f"packed weights require impl='pallas', "
                          f"got {impl!r}")
+    if pk.scale is not None:
+        # quantized packed weights (quantize_conv2d_weights /
+        # calibrate_conv2d): the int8 tier chain
+        return _conv2d_q8(x, pk, stride=stride, padding=padding,
+                          activation=activation, tile_h=tile_h,
+                          dataflow=dataflow,
+                          use_autotune_cache=use_autotune_cache,
+                          layer=layer)
     k = pk.w.shape[0]
 
     def _pallas_tier():
@@ -615,6 +691,109 @@ def _conv2d_packed_pallas(x: jax.Array, pk: PackedConv2dWeights, *,
                          use_autotune_cache=use_autotune_cache,
                          packed_cout=pk.cout)
     return _conv2d_packed_vjp_core(cfg, x, pk.w, pk.bias)
+
+
+def _unpack_cout_row(row: jax.Array, groups: int, cout: int) -> jax.Array:
+    """Packed padded ``(1, G*CoutP)`` row -> logical ``(Cout,)``."""
+    cpp, cout_pg = row.shape[1] // groups, cout // groups
+    return row.reshape(groups, cpp)[:, :cout_pg].reshape(cout)
+
+
+def _q8_forward(x_q: jax.Array, pk: PackedConv2dWeights, *, stride: int,
+                activation: str | None, tile_h: int | None,
+                dataflow: str | None,
+                use_autotune_cache: bool) -> jax.Array:
+    """The int8 Pallas tier: exact int32 MXU accumulation with the fused
+    dequant epilogue.  ``x_q`` is already quantized and 'same'-pre-padded
+    with the activation zero point.  Module-level so the fault harness
+    (``testing/faults.py``) can patch it as the ``"q8"`` tier target.
+    """
+    s_row, b_q = ref.dequant_params(pk.w, pk.scale, pk.input_scale,
+                                    pk.zero_point, pk.bias)
+    tile_h = tile_h if tile_h is not None else pk.tile_h
+    dataflow = dataflow if dataflow is not None else pk.dataflow
+    if use_autotune_cache and (tile_h is None or dataflow is None):
+        # int8 tunings live in their own conv2d_q8: namespace — an f32
+        # record for the same geometry must never leak knobs in here
+        w_shape = (pk.w.shape[0], pk.w.shape[1], pk.w.shape[2], pk.cout)
+        rec = autotune.knobs_for(x_q.shape, w_shape, stride=stride, pad=0,
+                                 groups=pk.groups, dtype="int8",
+                                 op="conv2d_q8")
+        if rec is not None and rec["tile_cout"] == pk.tile_cout:
+            tile_h = tile_h if tile_h is not None else rec["tile_h"]
+            dataflow = dataflow if dataflow is not None \
+                else rec["dataflow"]
+    return trim_conv2d(x_q, pk.w, b_q.reshape(1, -1),
+                       s_row.reshape(1, -1), stride=stride, pad=0,
+                       tile_h=tile_h, tile_cout=pk.tile_cout,
+                       groups=pk.groups, activation=activation,
+                       dataflow=dataflow or "carry", packed_cout=pk.cout)
+
+
+def _conv2d_q8(x: jax.Array, pk: PackedConv2dWeights, *, stride: int,
+               padding: str, activation: str | None, tile_h: int | None,
+               dataflow: str | None, use_autotune_cache: bool,
+               layer: str | None = None) -> jax.Array:
+    """The quantized tier chain (DESIGN.md §11): ``q8 -> pallas -> ref``.
+
+    ``q8`` runs the int8 kernel; a fault demotes to ``pallas``, the f32
+    kernel over the *dequantized* weights (same quantization error, fast
+    path); ``ref`` is the ``conv2d_quantized`` oracle.  x may be f32
+    (quantized here against the packed calibration) or already int8.
+    """
+    k = pk.w.shape[0]
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        x_q = x
+    else:
+        x_q = ref.quantize_int8(x, pk.input_scale, pk.zero_point)
+    if padding == "same":
+        ph, pw = _same_pads(x.shape[1], k, stride), \
+            _same_pads(x.shape[2], k, stride)
+        zp = pk.zero_point.astype(x_q.dtype)
+        x_pad = jax.lax.pad(x_q, zp, ((0, 0, 0), (*ph, 0), (*pw, 0),
+                                      (0, 0, 0)))
+    elif padding == "valid":
+        x_pad = x_q
+    else:
+        raise ValueError(f"padding={padding!r} must be 'same' or 'valid'")
+
+    def _q8_tier():
+        return _q8_forward(x_pad, pk, stride=stride, activation=activation,
+                           tile_h=tile_h, dataflow=dataflow,
+                           use_autotune_cache=use_autotune_cache)
+
+    w_q = _unpack_weights(pk.w, pk.groups, pk.cout)
+    w_scale = _unpack_cout_row(pk.scale, pk.groups, pk.cout)
+    b_logical = None if pk.bias is None \
+        else _unpack_cout_row(pk.bias, pk.groups, pk.cout)
+
+    def _pallas_tier():
+        # f32 kernel over the dequantized weights and quantized-dequantized
+        # input: same quantization error as the int8 tier, fast fallback
+        x_dq = (x_q.astype(jnp.float32)
+                - pk.zero_point.astype(jnp.float32)) * pk.input_scale
+        w_dq = w_q.astype(jnp.float32) * w_scale
+        return _conv2d_pallas(x_dq, w_dq, stride=stride, padding=padding,
+                              feature_group_count=pk.groups,
+                              bias=b_logical, activation=activation,
+                              tile_h=tile_h, tile_cout=pk.tile_cout,
+                              dataflow=dataflow,
+                              use_autotune_cache=use_autotune_cache)
+
+    def _ref_tier():
+        return ref.conv2d_quantized(
+            x_q, w_q, x_scale=pk.input_scale, x_zero_point=pk.zero_point,
+            w_scale=w_scale, bias=b_logical, stride=stride,
+            padding=padding, feature_group_count=pk.groups,
+            activation=activation)
+
+    key = guard.problem_key("conv2d_q8", x.shape,
+                            (k, pk.w.shape[1], pk.w.shape[2], pk.cout),
+                            stride=stride, padding=padding,
+                            groups=pk.groups, dtype=str(x.dtype))
+    return guard.run_chain(key, [("q8", _q8_tier),
+                                 ("pallas", _pallas_tier),
+                                 ("ref", _ref_tier)], layer=layer)
 
 
 def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,

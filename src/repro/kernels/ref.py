@@ -38,6 +38,102 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     return epilogue(y, bias, activation)
 
 
+def _same_pads(size: int, k: int, s: int) -> tuple[int, int]:
+    """XLA 'SAME' padding: out = ceil(size/s), possibly asymmetric."""
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def quantize_int8(x: jax.Array, scale, zero_point=0) -> jax.Array:
+    """Affine int8 quantization ``q = clip(round(x/scale) + zp, -128, 127)``.
+
+    ``scale``/``zero_point`` may be scalars (per-tensor activations) or
+    broadcastable arrays (per-channel weights with ``zero_point=0``).
+    """
+    q = jnp.round(x / jnp.asarray(scale, jnp.float32))
+    q = q + jnp.asarray(zero_point, jnp.float32)
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def weight_scales_int8(w: jax.Array) -> jax.Array:
+    """Per-out-channel symmetric weight scales: ``max|w| / 127``.
+
+    w: (K, K, Cin/g, Cout) -> (Cout,) f32.  Symmetric (zero_point = 0),
+    so the int8 matmul needs no weight zero-point correction.
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(0, 1, 2))
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def dequant_params(w_q: jax.Array, w_scale: jax.Array, x_scale,
+                   x_zero_point, bias: jax.Array | None = None) -> tuple:
+    """The epilogue ``y = (acc_i32 + bias_q) * scale`` of an int8 conv.
+
+    ``scale = x_scale * w_scale`` per out channel, and ``bias_q`` is the
+    *requantized int32 bias*:
+
+        bias_q = -z_x * colsum(w_q) + round(bias / scale)
+
+    Because the ifmap is padded with the activation *zero point* (not
+    zero), every output position sees a full kernel window of quantized
+    values, so the zero-point correction ``-z_x * colsum`` is
+    position-independent — and exactly integer.  The real bias is
+    rounded onto the ``scale`` grid (the standard fixed-point bias
+    treatment), which keeps the whole epilogue an exact int32 add
+    followed by ONE correctly-rounded f32 multiply: no mul+add pair
+    exists for a backend to contract into an FMA, so the kernel and the
+    oracle agree bit-for-bit on every backend.
+
+    Works on logical ``(K, K, Cin/g, Cout)`` weights with ``(Cout,)``
+    scales and on the kernel's padded layout with ``(1, G*CoutP)`` rows
+    (pad ``w_scale`` with ones so the bias requantization never divides
+    by zero) — the kernel and the oracle MUST both price their epilogue
+    through this one helper for the bit-exactness contract of
+    ``tests/test_quant.py`` to hold.
+    """
+    colsum = w_q.astype(jnp.int32).sum(axis=(0, 1, 2))
+    scale = jnp.asarray(x_scale, jnp.float32) * w_scale.astype(jnp.float32)
+    bias_q = -jnp.asarray(x_zero_point, jnp.int32) * colsum
+    if bias is not None:
+        bias_q = bias_q + jnp.round(
+            bias.astype(jnp.float32) / scale).astype(jnp.int32)
+    return scale, bias_q
+
+
+def conv2d_quantized(x_q: jax.Array, w_q: jax.Array, *, x_scale,
+                     x_zero_point, w_scale: jax.Array,
+                     bias: jax.Array | None = None, stride: int = 1,
+                     padding: str = "same", feature_group_count: int = 1,
+                     activation: str | None = None) -> jax.Array:
+    """Int8 quantized conv oracle: int32 accumulation, f32 dequant epilogue.
+
+    x_q: int8 (N, H, W, Cin); w_q: int8 (K, K, Cin/g, Cout); w_scale:
+    (Cout,) per-out-channel symmetric scales; ``x_scale``/``x_zero_point``
+    the per-tensor affine activation quantization.  'same' padding pads
+    with the activation zero point (the quantized image of 0.0), so the
+    result dequantizes to the f32 'same' conv.  Returns f32.
+    """
+    if padding == "same":
+        kh, kw = w_q.shape[0], w_q.shape[1]
+        ph = _same_pads(x_q.shape[1], kh, stride)
+        pw = _same_pads(x_q.shape[2], kw, stride)
+        zp = jnp.asarray(x_zero_point, x_q.dtype)
+        x_q = jax.lax.pad(x_q, zp, ((0, 0, 0), (*ph, 0), (*pw, 0),
+                                    (0, 0, 0)))
+    elif padding != "valid":
+        raise ValueError(f"padding={padding!r} must be 'same' or 'valid'")
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=feature_group_count)
+    scale, bias_q = dequant_params(w_q, w_scale, x_scale, x_zero_point,
+                                   bias)
+    y = (acc + bias_q).astype(jnp.float32) * scale
+    return epilogue(y, None, activation)
+
+
 def conv2d_grads(x: jax.Array, w: jax.Array, gy: jax.Array, *,
                  stride: int = 1, padding: str = "same",
                  feature_group_count: int = 1) -> tuple:

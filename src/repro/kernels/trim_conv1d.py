@@ -49,7 +49,7 @@ def trim_conv1d(x: jax.Array, w: jax.Array, *, tile_l: int | None = None,
     ``interpret=None`` auto-detects the backend (native on TPU)."""
     assert w.shape[0] >= 2
     interpret = resolve_interpret(interpret)
-    plan = Conv1dPlan.build(x.shape, w.shape, dtype_bytes=x.dtype.itemsize,
+    plan = Conv1dPlan.build(x.shape, w.shape, dtype_bytes=x.dtype,
                             tile_l=tile_l, tile_d=tile_d)
     xp = jnp.pad(x, ((0, 0), (0, plan.length_padded - plan.length), (0, 0)))
     assert xp.shape == plan.padded_input_shape

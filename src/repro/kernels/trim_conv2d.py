@@ -88,22 +88,37 @@ def _tap_matmuls(window, w_ref, *, kh: int, kw: int, stride: int,
     s = stride
     r = (kh - 1) % s  # static in-window row offset (ConvPlan.row_offset)
     cin = window.shape[-1]
-    acc = jnp.zeros((th_out * w_out, n_out), jnp.float32)
+    # int8 inputs accumulate exactly in int32 on the MXU; floats in fp32
+    acc_dtype = (jnp.int32 if jnp.issubdtype(window.dtype, jnp.integer)
+                 else jnp.float32)
+    acc = jnp.zeros((th_out * w_out, n_out), acc_dtype)
     for ki in range(kh):
         for kj in range(kw):
             rows = window[ki + r: ki + r + (th_out - 1) * s + 1: s,
                           kj: kj + (w_out - 1) * s + 1: s, :]
             acc += jnp.dot(rows.reshape(th_out * w_out, cin),
                            w_ref[ki, kj],
-                           preferred_element_type=jnp.float32)
+                           preferred_element_type=acc_dtype)
     return acc
 
 
-def _epilogue_store(acc, b_ref, o_ref, *, th_out: int, w_out: int,
+def _epilogue_store(acc, s_ref, b_ref, o_ref, *, th_out: int, w_out: int,
                     activation: str | None):
-    """Fused epilogue: bias + activation on the fp32 accumulator, then the
-    single store to the output block."""
-    if b_ref is not None:
+    """Fused epilogue: (dequant) + bias + activation on the accumulator,
+    then the single store to the output block.
+
+    ``s_ref`` (int8 route) holds the per-out-channel dequant scale row
+    and ``b_ref`` the *requantized int32 bias* — the int32 accumulator
+    becomes f32 via exactly ``(acc + bias_q) * scale``: an exact integer
+    add followed by one correctly-rounded multiply, the same operations
+    as ``ref.dequant_params`` / ``ref.conv2d_quantized`` with no mul+add
+    pair a backend could contract into an FMA, which is what makes the
+    quantized kernel bit-exact against the oracle."""
+    if s_ref is not None:
+        if b_ref is not None:
+            acc = acc + b_ref[0]       # int32 + int32: exact
+        acc = acc.astype(jnp.float32) * s_ref[0].astype(jnp.float32)
+    elif b_ref is not None:
         acc = acc + b_ref[0].astype(jnp.float32)
     acc = ACTIVATIONS[activation](acc)
     o_ref[0] = acc.reshape(th_out, w_out, -1).astype(o_ref.dtype)
@@ -111,13 +126,13 @@ def _epilogue_store(acc, b_ref, o_ref, *, th_out: int, w_out: int,
 
 def _carry_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
                   th_out: int, w_out: int, n_cout_tiles: int,
-                  activation: str | None, has_bias: bool):
+                  activation: str | None, has_bias: bool,
+                  has_scale: bool = False):
     """One grid step: strip ``g`` of (image ``n``, group) x cout tile,
     with the K-1 boundary rows carried across sequential strips."""
-    if has_bias:
-        b_ref, o_ref, carry_ref = rest
-    else:
-        b_ref, (o_ref, carry_ref) = None, rest
+    s_ref = rest[0] if has_scale else None
+    b_ref = rest[has_scale] if has_bias else None
+    o_ref, carry_ref = rest[has_scale + has_bias:]
     g = pl.program_id(2)
     co = pl.program_id(3)
 
@@ -134,7 +149,7 @@ def _carry_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
 
     acc = _tap_matmuls(window, w_ref, kh=kh, kw=kw, stride=stride,
                        th_out=th_out, w_out=w_out, n_out=o_ref.shape[-1])
-    _epilogue_store(acc, b_ref, o_ref, th_out=th_out, w_out=w_out,
+    _epilogue_store(acc, s_ref, b_ref, o_ref, th_out=th_out, w_out=w_out,
                     activation=activation)
 
     if kh > 1:
@@ -146,17 +161,16 @@ def _carry_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
 
 def _halo_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
                  th_out: int, w_out: int, activation: str | None,
-                 has_bias: bool):
+                 has_bias: bool, has_scale: bool = False):
     """One grid step of the halo dataflow: the overlapping input window
     already contains the K-1 predecessor rows — no scratch, no cross-step
     dependency, any grid order."""
-    if has_bias:
-        b_ref, (o_ref,) = rest[0], rest[1:]
-    else:
-        b_ref, (o_ref,) = None, rest
+    s_ref = rest[0] if has_scale else None
+    b_ref = rest[has_scale] if has_bias else None
+    (o_ref,) = rest[has_scale + has_bias:]
     acc = _tap_matmuls(x_ref[0], w_ref, kh=kh, kw=kw, stride=stride,
                        th_out=th_out, w_out=w_out, n_out=o_ref.shape[-1])
-    _epilogue_store(acc, b_ref, o_ref, th_out=th_out, w_out=w_out,
+    _epilogue_store(acc, s_ref, b_ref, o_ref, th_out=th_out, w_out=w_out,
                     activation=activation)
 
 
@@ -176,6 +190,7 @@ def make_plan(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
     "stride", "pad", "tile_h", "tile_cout", "groups", "activation",
     "dataflow", "packed_cout", "interpret"))
 def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+                scale: jax.Array | None = None,
                 *, stride: int = 1, pad: int = 0, tile_h: int | None = None,
                 tile_cout: int | None = None, groups: int = 1,
                 activation: str | None = None,
@@ -191,9 +206,19 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     ``"carry"`` (shadow-register scratch, serialized strips, zero halo) or
     ``"halo"`` (overlapping strip fetch, order-independent grid).
 
+    ``scale`` enables the int8 route (DESIGN.md §11): x and w are int8,
+    the K x K taps run as int8 MXU matmuls with exact int32 accumulation,
+    and the fused epilogue dequantizes ``(acc + bias) * scale`` in f32 —
+    ``scale`` is the per-out-channel ``x_scale * w_scale`` row of
+    ``ref.dequant_params`` (shape ``(Cout,)``; the packed layout when
+    ``packed_cout``), ``bias`` the *requantized int32 bias* from the same
+    helper (zero-point correction plus the real bias on the scale grid),
+    and the caller pre-pads 'same' inputs with the activation zero point
+    (``pad=0`` here).  The output is f32.
+
     ``packed_cout``: when not None, ``w`` is already in the plan's
-    ``padded_weight_shape`` (and ``bias``, if given, in the padded
-    ``(1, groups * cout_padded)`` layout) as produced by
+    ``padded_weight_shape`` (and ``bias``/``scale``, if given, in the
+    padded ``(1, groups * cout_padded)`` layout) as produced by
     ``ops.pack_conv2d_weights`` with the same ``tile_cout``;
     ``packed_cout`` is the *logical* C_out the caller gets back.
 
@@ -203,6 +228,20 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     if activation not in ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}; "
                          f"choose from {sorted(ACTIVATIONS, key=str)}")
+    quantized = scale is not None
+    if jnp.issubdtype(x.dtype, jnp.integer) != quantized:
+        raise ValueError(
+            "the int8 route requires BOTH integer inputs and a dequant "
+            f"scale: got x.dtype={x.dtype}, scale "
+            f"{'given' if quantized else 'missing'}")
+    if quantized and not jnp.issubdtype(w.dtype, jnp.integer):
+        raise ValueError(f"quantized conv needs integer weights, "
+                         f"got {w.dtype}")
+    if quantized and bias is not None \
+            and not jnp.issubdtype(bias.dtype, jnp.integer):
+        raise ValueError(
+            "quantized conv takes the requantized int32 bias of "
+            f"ref.dequant_params, got {bias.dtype}")
     interpret = resolve_interpret(interpret)
     if packed_cout is None:
         w_shape = w.shape
@@ -212,7 +251,7 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
                              "were packed for")
         w_shape = (w.shape[0], w.shape[1], w.shape[2], packed_cout)
     plan = make_plan(x.shape, w_shape, stride=stride, pad=pad,
-                     groups=groups, dtype_bytes=x.dtype.itemsize,
+                     groups=groups, dtype_bytes=x.dtype,
                      tile_h=tile_h, tile_cout=tile_cout, dataflow=dataflow)
 
     # --- layout: pad once in HBM, tile into non-overlapping strips ---------
@@ -252,7 +291,7 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         kernel = functools.partial(
             _halo_kernel, kh=plan.kh, kw=plan.kw, stride=plan.stride,
             th_out=plan.th_out, w_out=plan.w_out, activation=activation,
-            has_bias=bias is not None)
+            has_bias=bias is not None, has_scale=quantized)
         scratch_shapes = []
     else:
         in_specs = [
@@ -265,25 +304,35 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         kernel = functools.partial(
             _carry_kernel, kh=plan.kh, kw=plan.kw, stride=plan.stride,
             th_out=plan.th_out, w_out=plan.w_out, n_cout_tiles=co_tiles,
-            activation=activation, has_bias=bias is not None)
+            activation=activation, has_bias=bias is not None,
+            has_scale=quantized)
         scratch_shapes = [pltpu.VMEM(plan.carry_shape, x.dtype)]
 
     # stationary weight tile of this group's cout block
     in_specs.append(pl.BlockSpec(
         plan.w_block, lambda ni, gr, g, co: (0, 0, 0, gr * co_tiles + co)))
     inputs = [z, wk]
-    if bias is not None:
+
+    def _cout_row(v):
+        """Pad a per-out-channel row (bias / dequant scale) to the plan's
+        ``(1, groups * cout_padded)`` layout and give it the cout-tile
+        BlockSpec."""
         if packed_cout is None:
-            bp = jnp.pad(bias.reshape(groups, cout_pg),
+            vp = jnp.pad(v.reshape(groups, cout_pg),
                          ((0, 0), (0, cpp - cout_pg)))
-            bp = bp.reshape(1, groups * cpp)
+            vp = vp.reshape(1, groups * cpp)
         else:
-            assert bias.shape == (1, groups * cpp), bias.shape
-            bp = bias
-        inputs.append(bp)
+            assert v.shape == (1, groups * cpp), v.shape
+            vp = v
+        inputs.append(vp)
         in_specs.append(pl.BlockSpec(
             (1, plan.tile_cout),
             lambda ni, gr, g, co: (0, gr * co_tiles + co)))
+
+    if quantized:
+        _cout_row(scale.astype(jnp.float32))
+    if bias is not None:
+        _cout_row(bias)
 
     compiler_params = None
     if not interpret:
@@ -301,7 +350,9 @@ def trim_conv2d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         out_specs=pl.BlockSpec(
             plan.out_block,
             lambda ni, gr, g, co: (ni, g, 0, gr * co_tiles + co)),
-        out_shape=jax.ShapeDtypeStruct(plan.padded_output_shape, x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            plan.padded_output_shape,
+            jnp.float32 if quantized else x.dtype),
         scratch_shapes=scratch_shapes,
         compiler_params=compiler_params,
         interpret=interpret,
@@ -435,7 +486,7 @@ def trim_conv2d_weight_grad(x: jax.Array, g: jax.Array, *,
             f"stride={stride} pad={pad}")
     plan = make_weight_grad_plan(
         x.shape, (kh, kw, cin // groups, cout), stride=stride, pad=pad,
-        groups=groups, dtype_bytes=x.dtype.itemsize, tile_go=tile_go,
+        groups=groups, dtype_bytes=x.dtype, tile_go=tile_go,
         tile_cout=tile_cout)
 
     # --- layout: fold pad into HBM, round rows up to whole strips ----------

@@ -202,6 +202,36 @@ def conv2d_pack_params(p: dict, *, groups: int = 1,
         padding=padding)}
 
 
+def calibrate_conv2d(p: dict, x_batch: jax.Array, *, groups: int = 1,
+                     stride: int = 1, padding: str = "same",
+                     tile_cout: int | None = None,
+                     tile_h: int | None = None,
+                     dataflow: str | None = None) -> dict:
+    """Post-training int8 calibration of one conv layer (DESIGN.md §11).
+
+    Observes the sample batch's activation range for the per-tensor
+    affine calibration — ``scale = (max - min) / 255`` over the
+    ``[-128, 127]`` grid with the range widened to contain 0.0 so the
+    zero point (the quantized image of 0.0, which also pads 'same'
+    borders) is representable — quantizes the weights per-out-channel
+    symmetric (``ref.weight_scales_int8``) and packs everything into a
+    quantized :class:`~repro.kernels.ops.PackedConv2dWeights`.  The
+    returned ``{"packed": ...}`` tree replaces ``{"w", "b"}`` and is
+    consumed transparently by :func:`conv2d_apply`, which then runs the
+    int8 tier chain of ``ops.conv2d``.
+    """
+    xf = x_batch.astype(jnp.float32)
+    lo = jnp.minimum(jnp.min(xf), 0.0)
+    hi = jnp.maximum(jnp.max(xf), 0.0)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    zp = jnp.clip(jnp.round(-128.0 - lo / scale),
+                  -128, 127).astype(jnp.int32)
+    return {"packed": ops.quantize_conv2d_weights(
+        p["w"], p.get("b"), x_scale=scale, x_zero_point=zp, groups=groups,
+        tile_cout=tile_cout, tile_h=tile_h, dataflow=dataflow,
+        x_shape=x_batch.shape, stride=stride, padding=padding)}
+
+
 def depthwise_separable_params(k: int, cin: int, cout: int,
                                *, bias: bool = True) -> dict:
     """MobileNet-style depthwise 3x3 + pointwise 1x1 block."""

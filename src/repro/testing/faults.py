@@ -69,6 +69,7 @@ TIER_TARGETS = {
     "fused": ("repro.kernels.trim_conv2d_fused", "_fused_forward"),
     "pallas": ("repro.kernels.ops", "trim_conv2d"),
     "sharded": ("repro.kernels.ops", "sharded_conv2d"),
+    "q8": ("repro.kernels.ops", "_q8_forward"),
 }
 
 #: persistence path -> (module, attribute) of its patchable publish alias

@@ -617,6 +617,46 @@ def test_tune_fused_network_sweep():
 
 
 # ---------------------------------------------------------------------------
+# Quantized keys (DESIGN.md §11): conv2d_q8 namespacing + dtype in the key
+# ---------------------------------------------------------------------------
+
+def test_q8_keys_never_alias_other_namespaces():
+    """An int8 record lives under conv2d_q8:...:int8:... — the same raw
+    shape tuple can never collide with the conv2d:/conv2d_wgrad:/
+    conv2d_shard:/conv2d_fused: records of its own geometry, and dtype
+    is part of *every* namespace's key (an f32 and an int8 tune of the
+    identical problem are distinct records in the same namespace)."""
+    q8_key = autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0,
+                               dtype="int8", op="conv2d_q8")
+    assert q8_key.startswith("conv2d_q8:")
+    assert ":int8:" in q8_key
+    others = {autotune.make_key(X_SHAPE, W_SHAPE, stride=1, pad=0, op=op)
+              for op in ("conv2d", "conv2d_wgrad",
+                         autotune.sharded_key_op(1, 4))}
+    assert len({q8_key, *others}) == 1 + len(others)
+    # dtype distinguishes records inside a namespace, not just across
+    for op in ("conv2d", "conv2d_q8", "conv2d_wgrad"):
+        assert autotune.make_key(X_SHAPE, W_SHAPE, op=op, dtype="int8") \
+            != autotune.make_key(X_SHAPE, W_SHAPE, op=op, dtype="float32")
+    # writing the q8 record never shadows the plain conv2d consult
+    autotune.store(q8_key, dict(tile_h=4, tile_cout=6, dataflow="halo"))
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE) is None
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE, dtype="int8",
+                              op="conv2d_q8")["tile_cout"] == 6
+    # ... and the f32 record never leaks into the q8 consult
+    autotune.store(autotune.make_key(X_SHAPE, W_SHAPE),
+                   dict(tile_h=8, tile_cout=12, dataflow="carry"))
+    got = autotune.knobs_for(X_SHAPE, W_SHAPE, dtype="int8",
+                             op="conv2d_q8")
+    assert (got["tile_h"], got["dataflow"]) == (4, "halo")
+    # malformed q8 records are rejected, not trusted
+    autotune.store(q8_key, dict(tile_h="bad", tile_cout=6,
+                                dataflow="halo"))
+    assert autotune.knobs_for(X_SHAPE, W_SHAPE, dtype="int8",
+                              op="conv2d_q8") is None
+
+
+# ---------------------------------------------------------------------------
 # Serving prewarm (DESIGN.md §10): no cold tunes after prewarm_buckets
 # ---------------------------------------------------------------------------
 
