@@ -27,9 +27,18 @@ plans with:
   *counted* external reads are compared against the analytical
   prediction (they must agree exactly).
 
+* **edge** rows (``--net resnet18 | unet``) — DAG topologies plan
+  through :class:`~repro.core.netplan.NetworkGraph`: one row per graph
+  edge with the residency pass's per-edge decision (resident / spilled /
+  refetch), the tensor bytes and the liveness interval it occupies.
+  Skip-connection traffic lands in the joins' rows of the plan kind;
+  linear nets additionally assert the NetworkGraph linear reduction
+  (chain-as-DAG == NetworkPlan, byte for byte).
+
 Run:
 
   PYTHONPATH=src python benchmarks/paper_eval.py --net vgg16 --net alexnet
+  PYTHONPATH=src python benchmarks/paper_eval.py --net resnet18 --measured
   PYTHONPATH=src python benchmarks/paper_eval.py --measured --json OUT.json
 
 ``--json`` writes the artifact CI uploads next to the ``benchmarks/run.py``
@@ -51,6 +60,10 @@ try:                                    # python benchmarks/paper_eval.py
     from run import _git_rev
 except ImportError:                     # imported as benchmarks.paper_eval
     from benchmarks.run import _git_rev
+
+#: DAG topologies evaluated through :class:`~repro.core.NetworkGraph`
+#: (per-edge residency) instead of the linear :class:`NetworkPlan`.
+GRAPH_NETS = ("resnet18", "unet")
 
 
 def arch_rows(netplan) -> tuple[list[dict], dict]:
@@ -88,7 +101,7 @@ def sim_rows(netplan, cap: int = 14) -> list[dict]:
     from repro.core.dataflow import TrimSliceSim
     rng = np.random.default_rng(0)
     rows, seen = [], set()
-    for s in netplan.steps:
+    for s in getattr(netplan, "conv_steps", netplan.steps):
         l = s.layer
         size = min(l.ifmap, cap)
         geo = (size, l.kernel, l.stride)
@@ -179,6 +192,122 @@ def executed_eval(net: str, *, batch: int = 1,
         wall_fused_s=min(_wall(fused) for _ in range(2)))
 
 
+def edge_rows(graphplan) -> list[dict]:
+    """Per-edge residency decisions of a :class:`NetworkGraph` as JSON
+    rows (``kind="edge"``): producer -> consumer, tensor bytes, the
+    resident/spilled/refetch state and the liveness interval the edge
+    occupies in the topological order."""
+    return [dict(kind="edge", network=graphplan.name, **r)
+            for r in graphplan.edge_rows()]
+
+
+def executed_graph_eval(net: str, *, batch: int = 1,
+                        exec_scale: int = 8) -> dict:
+    """The executed traffic comparison for a DAG topology: each fusable
+    linear segment between joins runs as fused megakernels
+    (:class:`GraphFusePlan`), and the fused graph executor must
+    bit-match the per-layer graph executor.  Byte accounting is
+    full-scale; execution runs the ``exec_scale``-reduced graph."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import GraphFusePlan, NetworkGraph, scale_graph
+    from repro.core.netplan import graph_nodes
+    from repro.models import layers as mlayers
+    from repro.models.base import init_params
+
+    fs = GraphFusePlan.build(net, n=batch).summary()
+    never = NetworkGraph.build(net, n=batch,
+                               residency="never").hbm_bytes()["total"]
+    auto = NetworkGraph.build(net, n=batch,
+                              residency="auto").hbm_bytes()["total"]
+    modeled_ratio = never / auto
+
+    g = scale_graph(graph_nodes(net), exec_scale)
+    src = next(nd for nd in g if not nd.inputs)
+    params = init_params(mlayers.cnn_params_from_graph(g),
+                         jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (batch, src.layer.ifmap, src.layer.ifmap, src.layer.in_channels)),
+        jnp.float32)
+    fplan = GraphFusePlan.build(g, n=batch)
+
+    per_layer = jax.jit(
+        lambda p, v: mlayers.cnn_apply_from_graph(p, g, v))
+    fused = jax.jit(
+        lambda p, v: mlayers.cnn_apply_from_graph(p, g, v, fused=True,
+                                                  fuse_plan=fplan))
+    y_ref = per_layer(params, x)
+    y_fus = fused(params, x)          # also the compile warmup
+    bit_match = bool(jnp.array_equal(y_ref, y_fus))
+
+    def _wall(fn):
+        t0 = time.perf_counter()
+        fn(params, x).block_until_ready()
+        return time.perf_counter() - t0
+
+    return dict(
+        executed_ratio=fs["executed_ratio"],
+        executed_bytes=fs["executed_bytes"],
+        per_layer_bytes=fs["per_layer_bytes"],
+        segments=fs["segments"], groups=fs["groups"],
+        max_depth=fs["max_depth"], fused_layers=fs["fused_layers"],
+        modeled_ratio=modeled_ratio,
+        divergence=abs(fs["executed_ratio"] - modeled_ratio)
+        / modeled_ratio,
+        exec_scale=exec_scale, bit_match=bit_match,
+        wall_per_layer_s=min(_wall(per_layer) for _ in range(2)),
+        wall_fused_s=min(_wall(fused) for _ in range(2)))
+
+
+def evaluate_graph(net: str, *, batch: int = 1, residency: str = "auto",
+                   measured: bool = False,
+                   use_autotune_cache: bool = False,
+                   exec_scale: int = 8) -> dict:
+    """Full evaluation of one DAG topology via :class:`NetworkGraph`:
+    the same arch/plan/sim rows as the linear path, plus per-edge
+    residency rows and the graph-fused executed comparison."""
+    from repro.core import NetworkGraph
+    from repro.core.roofline import network_roofline
+    gp = NetworkGraph.build(net, n=batch, residency=residency,
+                            use_autotune_cache=use_autotune_cache)
+    a_rows, a_cmp = arch_rows(gp)
+    p_rows, p_cmp = plan_rows(gp)
+    rows = a_rows + p_rows + edge_rows(gp)
+    if measured:
+        rows += sim_rows(gp)
+    terms = network_roofline(net, gp)
+    t = gp.hbm_bytes()
+    occ = gp.boundary_occupancy()
+    summary = dict(
+        network=net, batch=batch, residency=residency, shards=1,
+        layers=len(gp.conv_steps), nodes=gp.n_nodes,
+        edges=len(gp.edges),
+        resident_edges=sum(1 for e in gp.edges if e.resident),
+        spilled_edge_bytes=gp.spilled_edge_bytes,
+        max_boundary_occupancy=max(occ) if occ else 0,
+        residency_budget=gp.residency_budget,
+        macs=gp.macs, ops=gp.ops,
+        hbm_total=t["total"], halo=t["halo"],
+        arch=dict(ops_per_macc=a_cmp["ops_per_macc"],
+                  ops_per_macc_per_slice=a_cmp["ops_per_macc_per_slice"],
+                  improvement=a_cmp["improvement"],
+                  max_layer_improvement=max(
+                      r["improvement"] for r in a_cmp["layers"])),
+        plan=dict(ops_per_macc_3dtrim=p_cmp["ops_per_macc_3dtrim"],
+                  ops_per_macc_trim=p_cmp["ops_per_macc_trim"],
+                  improvement=p_cmp["improvement"]),
+        roofline=dict(t_compute_s=terms.t_compute,
+                      t_memory_s=terms.t_memory,
+                      t_collective_s=terms.t_collective,
+                      dominant=terms.dominant))
+    if measured:
+        summary["executed"] = executed_graph_eval(net, batch=batch,
+                                                  exec_scale=exec_scale)
+        summary["executed_ratio"] = summary["executed"]["executed_ratio"]
+    return dict(rows=rows, summary=summary)
+
+
 def energy_report(net: str) -> dict:
     """Modeled energy + TOPS/W of one inference in int8 (the paper's
     fixed-point silicon: 1-byte transfers, ``mac_int8``) vs f32 (4-byte
@@ -198,8 +327,22 @@ def evaluate(net: str, *, batch: int = 1, residency: str = "auto",
              shards: int = 1, measured: bool = False,
              use_autotune_cache: bool = False,
              exec_scale: int = 16) -> dict:
-    """Full evaluation of one topology; returns rows + network summary."""
-    from repro.core import NetworkPlan
+    """Full evaluation of one topology; returns rows + network summary.
+
+    DAG nets (:data:`GRAPH_NETS`) route to :func:`evaluate_graph`; the
+    linear nets additionally prove the NetworkGraph linear reduction —
+    the chain re-planned as a DAG must reproduce the NetworkPlan's HBM
+    bytes and paper-metric accesses exactly."""
+    if net in GRAPH_NETS:
+        if shards != 1:
+            raise SystemExit(
+                f"--shards is the linear ShardedConvPlan path; "
+                f"{net} plans single-device (NetworkGraph)")
+        return evaluate_graph(net, batch=batch, residency=residency,
+                              measured=measured,
+                              use_autotune_cache=use_autotune_cache,
+                              exec_scale=exec_scale)
+    from repro.core import NetworkGraph, NetworkPlan
     from repro.core.roofline import network_roofline
     netplan = NetworkPlan.build(
         net, n=batch, residency=residency, spatial_shards=shards,
@@ -207,6 +350,15 @@ def evaluate(net: str, *, batch: int = 1, residency: str = "auto",
     a_rows, a_cmp = arch_rows(netplan)
     p_rows, p_cmp = plan_rows(netplan)
     rows = a_rows + p_rows
+    linear_reduction = None
+    if shards == 1:
+        gp = NetworkGraph.build(net, n=batch, residency=residency)
+        linear_reduction = all(
+            gp.hbm_bytes(m) == netplan.hbm_bytes(m)
+            and gp.accesses(m) == netplan.accesses(m)
+            for m in ("3dtrim", "trim"))
+        assert linear_reduction, \
+            (net, "NetworkGraph linear reduction != NetworkPlan")
     if measured:
         rows += sim_rows(netplan)
     terms = network_roofline(net, netplan)
@@ -227,6 +379,8 @@ def evaluate(net: str, *, batch: int = 1, residency: str = "auto",
                       t_memory_s=terms.t_memory,
                       t_collective_s=terms.t_collective,
                       dominant=terms.dominant))
+    if linear_reduction is not None:
+        summary["linear_reduction_exact"] = linear_reduction
     if measured:
         summary["executed"] = executed_eval(net, batch=batch,
                                             exec_scale=exec_scale)
@@ -236,7 +390,11 @@ def evaluate(net: str, *, batch: int = 1, residency: str = "auto",
 
 def render(summary: dict, rows: list[dict]) -> None:
     net = summary["network"]
-    print(f"\n== {net} ({summary['layers']} conv layers, "
+    graph = "nodes" in summary
+    head = (f"{summary['layers']} convs / {summary['nodes']} nodes / "
+            f"{summary['edges']} edges" if graph
+            else f"{summary['layers']} conv layers")
+    print(f"\n== {net} ({head}, "
           f"{summary['macs']/1e9:.2f} GMAC, batch {summary['batch']}, "
           f"residency={summary['residency']}) ==")
     print("  per-layer Ops/MAcc (arch accounting, Fig. 6 / SV):")
@@ -260,6 +418,16 @@ def render(summary: dict, rows: list[dict]) -> None:
           f"({p['improvement']:.3f}x), HBM {summary['hbm_total']/1e6:.1f} MB"
           + (f", halo wire {summary['halo']/1e6:.2f} MB"
              if summary["halo"] else ""))
+    if graph:
+        edges = [r for r in rows if r["kind"] == "edge"]
+        print(f"  per-edge residency ({summary['resident_edges']}/"
+              f"{summary['edges']} resident, peak interval occupancy "
+              f"{summary['max_boundary_occupancy']/1e6:.2f} MB of "
+              f"{summary['residency_budget']/1e6:.0f} MB budget):")
+        for r in edges:
+            print(f"    {r['producer']:>12s} -> {r['consumer']:<12s} "
+                  f"{r['bytes']/1e6:8.2f} MB  {r['state']:>7s}  "
+                  f"span {r['span']}")
     rf = summary["roofline"]
     print(f"  network roofline: T_comp {rf['t_compute_s']*1e3:.2f} ms "
           f"T_mem {rf['t_memory_s']*1e3:.2f} ms -> {rf['dominant']}-bound")
@@ -278,12 +446,13 @@ def render(summary: dict, rows: list[dict]) -> None:
               f"counted reads == analytical: {ok}")
     e = summary.get("executed")
     if e:
+        seg = (f"{e['segments']} segments, " if "segments" in e else "")
         print(f"  EXECUTED traffic (fused megakernels vs per-layer "
               f"pallas_calls): {e['executed_bytes']/1e6:.1f} MB vs "
               f"{e['per_layer_bytes']/1e6:.1f} MB -> "
               f"{e['executed_ratio']:.2f}x less "
               f"({e['fused_layers']}/{summary['layers']} layers fused, "
-              f"{e['groups']} groups, max depth {e['max_depth']})")
+              f"{seg}{e['groups']} groups, max depth {e['max_depth']})")
         print(f"    wall-clock @ 1/{e['exec_scale']} channels: fused "
               f"{e['wall_fused_s']*1e3:.0f} ms vs per-layer "
               f"{e['wall_per_layer_s']*1e3:.0f} ms; fused output "
@@ -300,9 +469,12 @@ def render(summary: dict, rows: list[dict]) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", action="append", default=None,
-                    choices=["vgg16", "alexnet", "mobilenet"],
+                    choices=["vgg16", "alexnet", "mobilenet",
+                             "resnet18", "unet"],
                     help="topology to evaluate (repeatable; default "
-                         "vgg16 + alexnet, the paper's networks)")
+                         "vgg16 + alexnet, the paper's networks; "
+                         "resnet18/unet evaluate the DAG NetworkGraph "
+                         "path with per-edge residency)")
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--residency", default="auto",
                     choices=["auto", "never", "always"])
@@ -354,7 +526,17 @@ def main() -> None:
     for s in summaries:
         assert s["arch"]["improvement"] > 1.0, s
         assert s["plan"]["improvement"] >= 1.0, s
-        assert s["arch"]["max_layer_improvement"] < 3.6, s
+        if s["network"] not in GRAPH_NETS:
+            # the "up to 3.37x" claim range is stated for the paper's
+            # own (linear, 224x224) networks; the DAG nets' small-image
+            # layers legitimately sit above it
+            assert s["arch"]["max_layer_improvement"] < 3.6, s
+        if s["network"] == "resnet18":
+            # DAG gate (ISSUE 10): the whole-network 3dtrim/trim
+            # architectural ratio on ResNet-18 must clear 2x
+            assert s["arch"]["improvement"] > 2.0, s
+        if "linear_reduction_exact" in s:
+            assert s["linear_reduction_exact"], s
         e = s.get("executed")
         if e:
             # fused execution must be a pure perf transform...
@@ -363,9 +545,16 @@ def main() -> None:
                 # ...and actually realize the residency saving (ISSUE 6
                 # acceptance: >= 2x executed traffic reduction on VGG-16)
                 assert e["executed_ratio"] >= 2.0, e
-    claimed = max(s["arch"]["max_layer_improvement"] for s in summaries)
-    print(f"\npaper claim check: best layer improvement {claimed:.2f}x "
-          f"(paper: up to 3.37x), every network ratio > 1  [OK]")
+    linear = [s for s in summaries if s["network"] not in GRAPH_NETS]
+    if linear:
+        claimed = max(s["arch"]["max_layer_improvement"] for s in linear)
+        print(f"\npaper claim check: best layer improvement "
+              f"{claimed:.2f}x (paper: up to 3.37x), every network "
+              f"ratio > 1  [OK]")
+    if any(s["network"] == "resnet18" for s in summaries):
+        r = next(s for s in summaries if s["network"] == "resnet18")
+        print(f"DAG gate: resnet18 whole-network 3dtrim/trim "
+              f"{r['arch']['improvement']:.2f}x (> 2x required)  [OK]")
 
     # energy gate: the quantized path must actually buy energy — the
     # modeled int8 inference must undercut f32 by > 2x on VGG-16

@@ -719,6 +719,50 @@ def tune_network(network="vgg16", *, n: int = 1, dtype: str = "float32",
     return results
 
 
+def tune_graph(graph, *, n: int = 1, dtype: str = "float32",
+               dtype_bytes: int | None = None,
+               backend: str | None = None, op: str = "conv2d",
+               fused: bool = False, measure: bool = False,
+               include_backward: bool = False, write: bool = True,
+               path: str | None = None) -> dict:
+    """Tune every conv node of a DAG topology in one sweep — the graph
+    analogue of :func:`tune_network`.
+
+    ``graph`` is anything ``core.netplan.graph_nodes`` resolves
+    ("resnet18" | "unet" | ``list[GraphNode]`` | a linear topology).
+    Conv nodes key the same ``conv2d:`` namespace over the same
+    kernel-seen shapes (node names are unique by graph validation, and
+    nodes sharing a problem — ResNet's repeated blocks — are tuned
+    once), so ``cnn_apply_from_graph`` / ``cnn_pack_params_from_graph``
+    run on cached plans afterwards.  Joins execute as jnp epilogues and
+    have nothing to tune.  ``fused=True`` additionally sweeps each
+    fusable linear segment (``core.fuse_plan.graph_segments``) through
+    :func:`tune_fused_network`, seeding the ``conv2d_fused:`` records
+    the segment megakernels consult.
+
+    Returns ``{"layers": {node: record}[, "fused": {segment: record}]}``.
+    """
+    from repro.core.netplan import graph_nodes
+    nodes = graph_nodes(graph)
+    layers = [nd.layer for nd in nodes if nd.op == "conv"]
+    out = {"layers": tune_network(
+        layers, n=n, dtype=dtype, dtype_bytes=dtype_bytes,
+        backend=backend, op=op, measure=measure,
+        include_backward=include_backward, write=write, path=path)}
+    if fused:
+        from repro.core.fuse_plan import graph_segments
+        fused_recs: dict[str, dict] = {}
+        for names, seg_layers in graph_segments(nodes):
+            if len(seg_layers) < 2:
+                continue
+            fused_recs.update(tune_fused_network(
+                list(seg_layers), n=n, dtype=dtype,
+                dtype_bytes=dtype_bytes, backend=backend, write=write,
+                path=path))
+        out["fused"] = fused_recs
+    return out
+
+
 def prewarm_buckets(network, buckets, *, dtype: str = "float32",
                     dtype_bytes: int | None = None,
                     backend: str | None = None, op: str = "conv2d",

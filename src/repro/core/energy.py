@@ -137,8 +137,17 @@ def energy_per_inference(network: str = "vgg16",
     try:
         layers = _NETWORK_LAYER_FNS[network]()
     except KeyError:
-        raise ValueError(f"unknown network {network!r}; choose from "
-                         f"{sorted(_NETWORK_LAYER_FNS)}") from None
+        # DAG topologies: the access-count model is per conv layer, so
+        # a graph's energy is the sum over its conv nodes (joins move
+        # activations but drive no MAC/register energy terms here)
+        from repro.core.netplan import GRAPHS, graph_nodes
+        if network not in GRAPHS:
+            raise ValueError(
+                f"unknown network {network!r}; choose from "
+                f"{sorted(_NETWORK_LAYER_FNS) + sorted(GRAPHS)}") \
+                from None
+        layers = [nd.layer for nd in graph_nodes(network)
+                  if nd.op == "conv"]
     per = [energy_per_layer(l, hw, dtype_bytes=dtype_bytes, mac=mac)
            for l in layers]
     total_uJ = sum(p["total_uJ"] for p in per)

@@ -62,8 +62,9 @@ from dataclasses import dataclass
 
 from repro.core import roofline
 from repro.core.conv_plan import STRIP_VMEM_BUDGET
-from repro.core.netplan import (NetworkPlan, RESIDENCY_BUDGET, infer_pools,
-                                layer_kernel_problem, network_layers,
+from repro.core.netplan import (NetworkPlan, RESIDENCY_BUDGET, graph_nodes,
+                                infer_pools, layer_kernel_problem,
+                                network_layers, pool_between,
                                 pooled_out_size)
 
 # Fused stages run the taps as native MXU matmuls, same ceiling as the
@@ -349,6 +350,13 @@ def _layer_eligible(layer) -> bool:
     """Can this layer run *inside* a fused megakernel at all?"""
     if layer.groups != 1 or layer.kernel > MAX_FUSED_K:
         return False
+    if layer.stride > 1 and layer.out_size == 1:
+        # A strided stage collapsing to a single output row fuses as a
+        # strided interior-row gather whose dot lowers with a different
+        # reduction association than the per-layer kernel (observed
+        # one-ULP drift), breaking the bitwise guarantee — and a
+        # one-strip output gains nothing from strip fusion anyway.
+        return False
     try:
         layer_kernel_problem(layer)
     except ValueError:
@@ -574,6 +582,179 @@ class FusedGroupPlan:
 
     def summary(self) -> dict:
         return dict(groups=len(self.groups), max_depth=self.depth,
+                    fused_layers=sum(g.depth for g in self.groups
+                                     if g.fused),
+                    executed_bytes=self.executed_hbm_bytes()["total"],
+                    per_layer_bytes=self.never_hbm_bytes(),
+                    executed_ratio=self.executed_ratio())
+
+
+# ---------------------------------------------------------------------------
+# DAG segmentation: fusable linear runs between joins
+# ---------------------------------------------------------------------------
+
+def graph_segments(nodes) -> list[tuple[tuple[str, ...], tuple]]:
+    """Maximal fusable linear runs of a DAG topology, as ``(names,
+    layers)`` tuples: the covered node names (conv nodes plus absorbed
+    single-consumer pool nodes, in topological order) and the run's
+    ``ConvLayer`` chain.
+
+    A run extends from conv to conv only while the intermediate tensor
+    has exactly one consumer (joins, skip taps and network outputs end
+    runs — their tensor must materialize) and the boundary's pooling is
+    exactly re-inferable from the spatial dims by
+    :func:`~repro.core.netplan.pool_between` — ``infer_pools``' chain
+    convention, so each run IS one of today's linear chains and
+    ``FusedGroupPlan`` / ``cnn_apply_from_layers`` apply unchanged.  A
+    trailing conv-node epilogue pool is *not* part of the run (the graph
+    executor applies it after the run)."""
+    nodes = list(nodes)
+    by = {nd.name: nd for nd in nodes}
+    cons: dict[str, list[str]] = {nd.name: [] for nd in nodes}
+    for nd in nodes:
+        for s in nd.inputs:
+            cons[s].append(nd.name)
+    used: set[str] = set()
+    segments: list[tuple[tuple[str, ...], tuple]] = []
+    for nd in nodes:
+        if nd.op != "conv" or nd.name in used:
+            continue
+        names, layers = [nd.name], [nd.layer]
+        used.add(nd.name)
+        cur = nd
+        while True:
+            nxts = cons[cur.name]
+            if len(nxts) != 1:
+                break
+            nxt = by[nxts[0]]
+            absorbed: list[str] = []
+            if nxt.op == "pool":
+                if cur.pool > 1 or cur.pool_window > 1:
+                    break        # stacked pools: not dims-recoverable
+                pc = cons[nxt.name]
+                if len(pc) != 1:
+                    break        # pooled tensor has other consumers
+                cand = by[pc[0]]
+                expected = (nxt.pool, nxt.pool_window)
+                absorbed = [nxt.name]
+            elif nxt.op == "conv":
+                cand = nxt
+                expected = (cur.pool, cur.pool_window)
+            else:
+                break            # add / concat / upsample end the run
+            if cand.op != "conv":
+                break
+            try:
+                if pool_between(cur.layer, cand.layer) != expected:
+                    break        # dims would re-infer a different pool
+            except ValueError:
+                break
+            names.extend(absorbed)
+            names.append(cand.name)
+            layers.append(cand.layer)
+            used.update(absorbed)
+            used.add(cand.name)
+            cur = cand
+        segments.append((tuple(names), tuple(layers)))
+    return segments
+
+
+@dataclass(frozen=True)
+class GraphFusePlan:
+    """Fusion partition of a DAG topology: each fusable linear segment
+    between joins is planned as today's chain (its own
+    :class:`FusedGroupPlan`); joins and skip taps stay un-fused — their
+    tensors must materialize, so they bound the segments.
+
+    ``executed_ratio()`` compares segment-sum executed bytes against the
+    all-per-layer baseline over the same segments; join traffic is
+    identical on both sides of that comparison and is accounted by
+    :class:`~repro.core.netplan.NetworkGraph`, not here."""
+
+    name: str
+    segments: tuple              # (names, FusedGroupPlan) pairs
+    n: int
+    dtype_bytes: int
+    residency: str
+
+    @classmethod
+    def build(cls, graph, *, n: int = 1, dtype_bytes: int | None = None,
+              residency: str = "auto",
+              residency_budget: int = RESIDENCY_BUDGET,
+              vmem_budget: int = FUSED_VMEM_BUDGET,
+              max_depth: int | None = None,
+              strip_rows: int | None = None,
+              use_autotune_cache: bool = False,
+              dtype: str = "float32", backend: str | None = None,
+              dataflow: str = "carry") -> "GraphFusePlan":
+        if dtype_bytes is None:
+            dtype_bytes = roofline.dtype_width(dtype)
+        nodes = graph_nodes(graph)
+        segs = []
+        for names, layers in graph_segments(nodes):
+            plan = FusedGroupPlan.build(
+                list(layers), n=n, dtype_bytes=dtype_bytes,
+                residency=residency, residency_budget=residency_budget,
+                vmem_budget=vmem_budget, max_depth=max_depth,
+                strip_rows=strip_rows,
+                use_autotune_cache=use_autotune_cache, dtype=dtype,
+                backend=backend, dataflow=dataflow)
+            segs.append((names, plan))
+        nm = graph if isinstance(graph, str) else "custom"
+        return cls(name=nm, segments=tuple(segs), n=n,
+                   dtype_bytes=dtype_bytes, residency=residency)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def groups(self) -> tuple[FusedGroup, ...]:
+        return tuple(g for _, p in self.segments for g in p.groups)
+
+    @property
+    def flops(self) -> int:
+        return sum(p.flops for _, p in self.segments)
+
+    @property
+    def macs(self) -> int:
+        return sum(p.macs for _, p in self.segments)
+
+    @property
+    def vmem_resident_bytes(self) -> int:
+        return max(p.vmem_resident_bytes for _, p in self.segments)
+
+    def executed_hbm_bytes(self) -> dict:
+        tot = dict(input=0, weights=0, output=0, pool=0, total=0)
+        for _, p in self.segments:
+            b = p.executed_hbm_bytes()
+            for k in tot:
+                tot[k] += b.get(k, 0)
+        return tot
+
+    def hbm_bytes(self, mode: str | None = None) -> dict:
+        return self.executed_hbm_bytes()
+
+    def never_hbm_bytes(self) -> int:
+        return sum(p.never_hbm_bytes() for _, p in self.segments)
+
+    def executed_ratio(self) -> float:
+        return self.never_hbm_bytes() \
+            / max(self.executed_hbm_bytes()["total"], 1)
+
+    def as_rows(self) -> list[dict]:
+        rows = []
+        for names, p in self.segments:
+            for g in p.groups:
+                d = g.as_dict()
+                d["segment"] = list(names)
+                rows.append(d)
+        return rows
+
+    def summary(self) -> dict:
+        return dict(segments=self.n_segments,
+                    groups=sum(len(p.groups) for _, p in self.segments),
+                    max_depth=max(p.depth for _, p in self.segments),
                     fused_layers=sum(g.depth for g in self.groups
                                      if g.fused),
                     executed_bytes=self.executed_hbm_bytes()["total"],

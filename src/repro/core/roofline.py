@@ -306,22 +306,28 @@ def sharded_conv_roofline(cell: str, plan) -> RooflineTerms:
 
 def network_roofline(cell: str, netplan) -> RooflineTerms:
     """Roofline terms for a whole :class:`~repro.core.netplan.NetworkPlan`
-    — the sequential-schedule sum (:func:`sum_terms`) of every layer's
-    plan terms, with the network's residency decisions applied to the
-    memory term (resident boundaries move no HBM bytes) and sharded
-    layers' halo-exchange bytes on the collective term."""
+    or :class:`~repro.core.netplan.NetworkGraph` — the sequential-
+    schedule sum (:func:`sum_terms`) of every step's terms, with the
+    network's residency decisions applied to the memory term (resident
+    boundaries and edges move no HBM bytes) and sharded layers'
+    halo-exchange bytes on the collective term.  Graph join steps carry
+    no ConvPlan (``plan is None``): they contribute their activation
+    traffic as pure memory-bound work with zero flops."""
     terms = []
     for s in netplan.steps:
         t = s.hbm_bytes()
         halo = float(t["halo"])
+        plan = getattr(s, "plan", None)
+        flops = float(plan.flops) if plan is not None else 0.0
+        peak = float(plan.vmem_resident_bytes) if plan is not None else 0.0
         terms.append(RooflineTerms(
             cell=s.name,
-            flops_per_dev=float(s.plan.flops),
+            flops_per_dev=flops,
             hbm_bytes_per_dev=float(t["total"]),
             coll_bytes_per_dev=halo,
             coll_by_kind={"collective-permute": halo} if halo else {},
-            peak_memory_bytes=float(s.plan.vmem_resident_bytes),
-            model_flops_per_dev=float(s.plan.flops),
+            peak_memory_bytes=peak,
+            model_flops_per_dev=flops,
         ))
     return sum_terms(cell, terms)
 

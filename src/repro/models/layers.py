@@ -469,6 +469,168 @@ def cnn_apply_from_layers(p: dict, layers_list, x: jax.Array, *,
     return x @ p["head"]["w"] + p["head"]["b"]
 
 
+def cnn_params_from_graph(graph, *, n_classes: int | None = None,
+                          bias: bool = True) -> dict:
+    """Parameter declarations for a DAG topology (DESIGN.md §12).
+
+    ``graph`` is anything ``core.netplan.graph_nodes`` resolves — a name
+    ("resnet18" | "unet"), a ``list[GraphNode]`` or a linear topology.
+    One entry per conv node, keyed by the NODE name (graphs have no
+    layer order to index by); joins carry no params.  ``n_classes``
+    adds a global-mean-pool linear head over the terminal node's
+    channels.  Consumed by :func:`cnn_apply_from_graph`."""
+    from repro.core.netplan import graph_nodes
+    nodes = graph_nodes(graph)
+    p, ch = {}, {}
+    for nd in nodes:
+        if nd.name == "head":
+            raise ValueError(
+                'node name "head" is reserved for the linear classifier '
+                "head — rename the graph node")
+        if nd.op == "conv":
+            l = nd.layer
+            p[nd.name] = conv2d_params(l.kernel, l.in_channels,
+                                       l.out_channels, groups=l.groups,
+                                       bias=bias)
+            ch[nd.name] = l.out_channels
+        elif nd.op == "concat":
+            ch[nd.name] = sum(ch[s] for s in nd.inputs)
+        else:
+            ch[nd.name] = ch[nd.inputs[0]]
+    if n_classes is not None:
+        d = ch[nodes[-1].name]
+        p["head"] = {"w": Param((d, n_classes), (None, None)),
+                     "b": Param((n_classes,), (None,), init="zeros")}
+    return p
+
+
+def cnn_pack_params_from_graph(p: dict, graph, *, n: int = 1) -> dict:
+    """Load-time packing of a DAG topology's conv weights — the graph
+    analogue of :func:`cnn_pack_params`: each conv node's kernel-seen
+    shape keys the autotune cache, so a ``tune_graph`` sweep makes the
+    packed forward pass run entirely on cached plans."""
+    from repro.core.netplan import graph_nodes, layer_kernel_problem
+    packed = dict(p)
+    for nd in graph_nodes(graph):
+        if nd.op != "conv" or nd.layer.kernel > ops.MAX_NATIVE_K:
+            continue
+        l = nd.layer
+        _, _, _, padding = layer_kernel_problem(l, n=n)
+        packed[nd.name] = conv2d_pack_params(
+            p[nd.name], groups=l.groups,
+            x_shape=(n, l.ifmap, l.ifmap, l.in_channels),
+            stride=l.stride, padding=padding)
+    return packed
+
+
+def _upsample_nearest(x: jax.Array, scale: int) -> jax.Array:
+    """Nearest-neighbour spatial upsampling (U-Net decoder)."""
+    return jnp.repeat(jnp.repeat(x, scale, axis=1), scale, axis=2)
+
+
+def _graph_conv_node(p: dict, nd, x: jax.Array, *, activation, impl,
+                     mesh, rules) -> jax.Array:
+    """One graph conv node: the trim conv (padding validated through the
+    shared layer -> executed-problem mapping) plus its epilogue pool."""
+    from repro.core.netplan import layer_kernel_problem
+    l = nd.layer
+    _, _, _, padding = layer_kernel_problem(l, n=x.shape[0])
+    y = conv2d_apply(p[nd.name], x, stride=l.stride, padding=padding,
+                     groups=l.groups, activation=activation, impl=impl,
+                     mesh=mesh, rules=rules, layer=l.name)
+    if nd.pool > 1 or nd.pool_window > 1:
+        y = _maxpool(y, nd.pool, nd.pool_window)
+    return y
+
+
+def cnn_apply_from_graph(p: dict, graph, x: jax.Array, *,
+                         activation: str | None = "relu",
+                         impl: str = "pallas", mesh=None,
+                         rules: dict | None = None,
+                         fused: bool = False,
+                         fuse_plan=None) -> jax.Array:
+    """Forward pass of a DAG topology built by
+    :func:`cnn_params_from_graph`: nodes execute in topological order —
+    conv nodes on the trim kernel path (tuned / packed / guarded, same
+    engine as the chains), joins as their jnp epilogues (elementwise
+    add, channel concat, max pool, nearest upsample).  Returns the
+    terminal node's activation, or class logits when the tree has a
+    head.
+
+    ``fused=True`` partitions the graph into fusable linear segments
+    between joins (``core.fuse_plan.graph_segments``) and executes each
+    multi-conv segment exactly like today's chains —
+    :func:`cnn_apply_from_layers` with a per-segment
+    :class:`~repro.core.fuse_plan.FusedGroupPlan` — so fused and
+    per-node execution are bit-identical (tested).  Pass ``fuse_plan``
+    (a prebuilt :class:`~repro.core.fuse_plan.GraphFusePlan`) to reuse
+    tuned segment plans.  The fused path needs raw conv params and is
+    single-device."""
+    from repro.core.netplan import graph_nodes
+    nodes = graph_nodes(graph)
+    by = {nd.name: nd for nd in nodes}
+    seg_of: dict[str, tuple] = {}
+    if fused or fuse_plan is not None:
+        if mesh is not None or rules is not None:
+            raise ValueError(
+                "fused execution is single-device; drop mesh/rules or "
+                "run the per-node path (fused=False)")
+        if fuse_plan is not None:
+            segs = list(fuse_plan.segments)
+        else:
+            from repro.core.fuse_plan import graph_segments
+            segs = [(names, None) for names, _ in graph_segments(nodes)]
+        for names, plan in segs:
+            seg_of[names[0]] = (names, plan)
+
+    outs: dict[str, jax.Array] = {}
+    executed: set[str] = set()
+    last = None
+    for nd in nodes:
+        if nd.name in executed:
+            continue
+        if nd.name in seg_of and len(seg_of[nd.name][0]) > 1:
+            names, plan = seg_of[nd.name]
+            seg_nodes = [by[nm] for nm in names]
+            conv_nodes = [sn for sn in seg_nodes if sn.op == "conv"]
+            first, tail = seg_nodes[0], seg_nodes[-1]
+            xin = outs[first.inputs[0]] if first.inputs else x
+            p_sub = {f"conv{i}": p[sn.name]
+                     for i, sn in enumerate(conv_nodes)}
+            y = cnn_apply_from_layers(
+                p_sub, [sn.layer for sn in conv_nodes], xin,
+                activation=activation, impl=impl, fused=True,
+                fuse_plan=plan)
+            if tail.pool > 1 or tail.pool_window > 1:
+                y = _maxpool(y, tail.pool, tail.pool_window)
+            executed.update(names)
+            outs[tail.name] = y
+            last = tail.name
+            continue
+        if nd.op == "conv":
+            xin = outs[nd.inputs[0]] if nd.inputs else x
+            y = _graph_conv_node(p, nd, xin, activation=activation,
+                                 impl=impl, mesh=mesh, rules=rules)
+        elif nd.op == "pool":
+            y = _maxpool(outs[nd.inputs[0]], nd.pool, nd.pool_window)
+        elif nd.op == "add":
+            y = outs[nd.inputs[0]]
+            for s in nd.inputs[1:]:
+                y = y + outs[s]
+        elif nd.op == "concat":
+            y = jnp.concatenate([outs[s] for s in nd.inputs], axis=-1)
+        else:                                     # upsample
+            y = _upsample_nearest(outs[nd.inputs[0]], nd.scale)
+        outs[nd.name] = y
+        executed.add(nd.name)
+        last = nd.name
+    y = outs[last]
+    if "head" not in p:
+        return y
+    y = y.mean(axis=(1, 2))                       # global mean pool
+    return y @ p["head"]["w"] + p["head"]["b"]
+
+
 # ---------------------------------------------------------------------------
 # Dense MLPs
 # ---------------------------------------------------------------------------

@@ -503,3 +503,76 @@ def test_latency_monotone_in_queue_position_under_fifo(seed, n,
     # FIFO also means batch order follows rid order
     execs = [r.t_execute for r in recs]
     assert all(a <= b for a, b in zip(execs, execs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# NetworkGraph invariants (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(net=st.sampled_from(["vgg16", "alexnet", "mobilenet"]),
+       n=st.integers(1, 3),
+       dataflow=st.sampled_from(["carry", "halo"]),
+       residency=st.sampled_from(["auto", "always", "never"]))
+def test_graph_linear_reduction_is_exact(net, n, dataflow, residency):
+    """A linear chain planned as a DAG IS the NetworkPlan: same
+    per-boundary residency decisions, same HBM byte terms and same
+    paper-metric accesses in both accounting modes, byte for byte."""
+    from repro.core.netplan import NetworkGraph, NetworkPlan
+    plan = NetworkPlan.build(net, n=n, dataflow=dataflow,
+                             residency=residency)
+    graph = NetworkGraph.build(net, n=n, dataflow=dataflow,
+                               residency=residency)
+    assert len(graph.steps) == len(plan.steps)
+    for gs, ps in zip(graph.steps, plan.steps):
+        assert gs.name == ps.name
+        assert gs.resident_in == ps.resident_in
+        assert gs.resident_out == ps.resident_out
+        assert gs.pool == ps.pool
+    for mode in ("3dtrim", "trim"):
+        assert graph.hbm_bytes(mode) == plan.hbm_bytes(mode)
+        assert graph.accesses(mode) == plan.accesses(mode)
+        assert graph.ops_per_macc(mode) == plan.ops_per_macc(mode)
+    assert graph.macs == plan.macs
+
+
+@settings(max_examples=15, deadline=None)
+@given(net=st.sampled_from(["resnet18", "unet"]), n=st.integers(1, 3),
+       budget=st.sampled_from([0, 1 << 18, 1 << 21, 8 << 20, 1 << 28]))
+def test_graph_intervals_respect_budget(net, n, budget):
+    """Under "auto" the resident liveness intervals never overlap
+    beyond the budget at any topological boundary, and shrinking the
+    budget can only move bytes from resident to re-fetched."""
+    from repro.core.netplan import NetworkGraph
+    gp = NetworkGraph.build(net, n=n, residency_budget=budget)
+    occ = gp.boundary_occupancy()
+    assert all(o <= budget for o in occ)
+    assert len(occ) == gp.n_nodes - 1
+    unlimited = NetworkGraph.build(net, n=n, residency_budget=1 << 60)
+    assert gp.spilled_edge_bytes >= unlimited.spilled_edge_bytes
+    for mode in ("3dtrim", "trim"):
+        assert gp.hbm_bytes(mode)["total"] >= \
+            unlimited.hbm_bytes(mode)["total"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(net=st.sampled_from(["resnet18", "unet"]), n=st.integers(1, 2),
+       mode=st.sampled_from(["3dtrim", "trim"]))
+def test_graph_never_is_per_node_sum(net, n, mode):
+    """policy="never" spills everything: the network total is exactly
+    the sum of per-conv ConvPlan bytes plus every join's activation
+    traffic (all in-edges re-read + output written)."""
+    from repro.core.netplan import LayerStep, NetworkGraph
+    gp = NetworkGraph.build(net, n=n, residency="never",
+                            fold_pooling=False)
+    in_edges: dict[str, list] = {}
+    for e in gp.edges:
+        in_edges.setdefault(e.consumer, []).append(e)
+    expected = 0
+    for s in gp.steps:
+        if isinstance(s, LayerStep):
+            expected += s.plan.hbm_bytes(mode)["total"]
+        else:
+            expected += sum(e.bytes for e in in_edges.get(s.name, []))
+            expected += s.out_bytes
+    assert gp.hbm_bytes(mode)["total"] == expected
